@@ -1,0 +1,105 @@
+"""Fig 11: the 8 applications × {small, medium, large} — three arms, same
+structure as the paper's figure:
+
+  baseline      — classic algorithm (numpy FW / Kruskal / BFS / brute force);
+  simd2 w/o units — the SIMD²-ized solver measured on this host's vector
+                  ALUs.  Min/max-family apps come out SLOWER than baseline
+                  (0.1–0.3×) — reproducing the paper's own observation that
+                  "these applications can never take advantage of
+                  matrix-based algorithms … when SIMD² units are absent";
+                  mma/orand/addnorm apps (GTC, KNN) win even without units
+                  via the MXU rewrites, as in the paper.
+  simd2 w/ units — modeled: measured time scaled by the v5e roofline gain of
+                  the app's ⊕⊗ op (benchmarks/common.modeled_speedup).
+
+Sizes follow configs/simd2_apps.py BENCH_SIZES (paper Table 4 ratios scaled
+to the CPU host; APP_SIZES holds the paper's originals).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import csv_row, gmean, timeit
+from repro.apps import baselines as bl
+from repro.apps import graphs
+from repro.apps import solvers as sv
+from repro.configs.simd2_apps import BENCH_SIZES
+
+
+def _inputs(app, n, seed=0):
+  if app in ("apsp",):
+    return (graphs.weighted_digraph(n, 0.25, seed=seed),)
+  if app == "aplp":
+    return (graphs.dag(n, 0.25, seed=seed),)
+  if app == "mcp":
+    return (graphs.capacity_graph(n, 0.25, seed=seed),)
+  if app == "maxrp":
+    return (graphs.reliability_graph(n, 0.25, seed=seed, maximize=True),)
+  if app == "minrp":
+    return (graphs.reliability_graph(n, 0.25, seed=seed, maximize=False),)
+  if app == "mst":
+    return (graphs.undirected_weighted(n, 0.3, seed=seed),)
+  if app == "gtc":
+    return (graphs.boolean_digraph(n, 0.03, seed=seed),)
+  if app == "knn":
+    ref, qry = graphs.knn_points(n, max(32, n // 8), 64, seed=seed)
+    return (ref, qry)
+  raise KeyError(app)
+
+
+_BASE = {"apsp": bl.apsp_np, "aplp": bl.aplp_np, "mcp": bl.maxcp_np,
+         "maxrp": bl.maxrp_np, "minrp": bl.minrp_np,
+         "mst": lambda w: bl.minimax_paths_np(w),
+         "gtc": bl.gtc_np, "knn": lambda r, q: bl.knn_np(r, q, 8)}
+
+
+def _simd2_fn(app):
+  if app == "knn":
+    return lambda r, q: sv.knn(r, q, k=8)
+  solver = sv.ALL_APPS[app]
+  return lambda *xs: solver(*xs)[0]
+
+
+_APP_OP = {"apsp": "minplus", "aplp": "maxplus", "mcp": "maxmin",
+           "maxrp": "maxmul", "minrp": "minmul", "mst": "minmax",
+           "gtc": "orand", "knn": "addnorm"}
+
+
+def run(sizes=("small", "medium", "large"), iters=2):
+  from benchmarks.common import modeled_speedup
+  rows = []
+  import time
+  for size in sizes:
+    sp_no_unit, sp_unit = [], []
+    for app, ns in BENCH_SIZES.items():
+      n = ns[size]
+      inp = _inputs(app, n)
+      t0 = time.perf_counter()
+      _BASE[app](*inp)
+      t_base = time.perf_counter() - t0
+      fn = _simd2_fn(app)
+      t_simd2 = timeit(lambda: fn(*inp), iters=iters)
+      s = t_base / t_simd2
+      # with-units arm: the op's ⊕⊗ contraction speeds up by the unit gain
+      unit_gain = modeled_speedup(_APP_OP[app], n, n, n)
+      s_unit = t_base / (t_simd2 / unit_gain)
+      sp_no_unit.append(s)
+      sp_unit.append(s_unit)
+      rows.append(csv_row(
+          f"fig11/{app}/{size}(n={n})", t_simd2 * 1e6,
+          f"no_units_x{s:.2f};with_units_modeled_x{s_unit:.2f}"))
+    rows.append(csv_row(
+        f"fig11/gmean/{size}", 0.0,
+        f"no_units_x{gmean(sp_no_unit):.2f};"
+        f"with_units_modeled_x{gmean(sp_unit):.2f}"))
+  return rows
+
+
+def main():
+  for r in run():
+    print(r)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,37 @@
+"""Table 5: area/power of the SIMD² unit — analytical model (SIMULATED RTL;
+see core/area_model.py).  Prints model-vs-paper for all 27 published numbers
+plus the power and full-chip overhead derivations."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core import area_model as am
+
+
+def run():
+  rows = []
+  for tbl_name, tbl in (("5a", am.table5a()), ("5b", am.table5b()),
+                        ("5c", am.table5c())):
+    for k, (model, paper) in tbl.items():
+      rows.append(csv_row(f"table{tbl_name}/{k.replace(' ', '_')}", 0.0,
+                          f"model={model};paper={paper}"))
+  fid = am.fidelity()
+  rows.append(csv_row("table5/fidelity", 0.0,
+                      f"mean_rel_err={fid['mean_rel_err']:.3f};"
+                      f"max_rel_err={fid['max_rel_err']:.3f};"
+                      f"n={fid['n_targets']}"))
+  rows.append(csv_row("table5/power_all_ops_W", 0.0,
+                      f"model={am.power_w(am.ALL_OPS):.2f};paper=4.53"))
+  rows.append(csv_row("table5/chip_overhead_pct", 0.0,
+                      f"model={am.chip_overhead_fraction() * 100:.1f};paper=5"))
+  rows.append(csv_row("table5/grid8x8_scale", 0.0,
+                      f"model={am.grid_scaling(8):.2f};paper=7.5"))
+  return rows
+
+
+def main():
+  for r in run():
+    print(r)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,57 @@
+"""Benchmark utilities: wall-clock timing (CPU host) + TPU roofline model.
+
+Two speedup columns appear throughout, mirroring the paper's method under
+our hardware substitution (DESIGN.md §2):
+  * measured — CPU wall time of the two program arms (both XLA-compiled);
+  * modeled  — v5e roofline ratio of the 'vector-unit' arm vs the
+    'SIMD²-unit' arm, using the MXU:VPU throughput gap (×16) and the
+    paper's observed structural-hazard factor for min/max / or-and pairs
+    (two same-port VPU ops per element → ×2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.roofline import hw
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+  """Best-of wall time in seconds (fn must return jax arrays)."""
+  for _ in range(warmup):
+    jax.block_until_ready(fn(*args))
+  best = float("inf")
+  for _ in range(iters):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    best = min(best, time.perf_counter() - t0)
+  return best
+
+
+_PORT_HAZARD = {"minmax": 2.0, "maxmin": 2.0, "orand": 2.0}
+
+
+def modeled_speedup(op: str, m: int, k: int, n: int,
+                    dtype_bytes: int = 2) -> float:
+  """v5e model: SIMD²-unit arm runs the ⊕⊗-contraction at MXU-class
+  throughput; the vector arm runs it on the VPU (peak/16) with a structural
+  port hazard for fused min/max / or/and pairs.  Both arms pay the same HBM
+  traffic, so the ratio is evaluated at the roofline knee."""
+  flops = 2.0 * m * k * n
+  bytes_ = dtype_bytes * (m * k + k * n + 4 * m * n)
+  t_mem = bytes_ / hw.HBM_BW
+  t_unit = max(flops / hw.PEAK_FLOPS_BF16, t_mem)
+  hazard = _PORT_HAZARD.get(op, 1.0)
+  t_vpu = max(flops * hazard / (hw.PEAK_FLOPS_BF16 * hw.VPU_RATIO), t_mem)
+  return t_vpu / t_unit
+
+
+def gmean(xs) -> float:
+  xs = np.asarray(list(xs), dtype=np.float64)
+  return float(np.exp(np.mean(np.log(xs))))
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+  return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,48 @@
+"""Fig 10: microbenchmark, non-square shapes (tall/wide/deep contractions)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, gmean, modeled_speedup, timeit
+from repro.core.mmo import mmo
+
+SHAPES = (
+    (2048, 256, 2048),   # shallow K
+    (256, 4096, 256),    # deep K
+    (4096, 512, 128),    # tall
+    (128, 512, 4096),    # wide
+)
+OPS = ("mma", "minplus", "maxmin", "orand", "addnorm")
+
+
+def run(shapes=SHAPES, ops=OPS, iters=3):
+  rng = np.random.default_rng(1)
+  rows = []
+  for (m, k, n) in shapes:
+    models = []
+    for op in ops:
+      a = rng.standard_normal((m, k)).astype(np.float32)
+      b = rng.standard_normal((k, n)).astype(np.float32)
+      if op == "orand":
+        a, b = a > 1.2, b > 1.2
+      aj, bj = jnp.asarray(a), jnp.asarray(b)
+      t_vec = timeit(lambda: mmo(aj, bj, op=op, backend="vector"),
+                     iters=iters)
+      t_xla = timeit(lambda: mmo(aj, bj, op=op, backend="xla"), iters=iters)
+      model = modeled_speedup(op, m, k, n)
+      models.append(model)
+      rows.append(csv_row(f"fig10/{op}/{m}x{k}x{n}", t_xla * 1e6,
+                          f"measured_x{t_vec / t_xla:.2f};modeled_x{model:.2f}"))
+    rows.append(csv_row(f"fig10/gmean/{m}x{k}x{n}", 0.0,
+                        f"modeled_gmean_x{gmean(models):.2f}"))
+  return rows
+
+
+def main():
+  for r in run():
+    print(r)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,51 @@
+"""Fig 9: microbenchmark, square matrices — 9 SIMD² ops × sizes.
+
+Arms: 'vector' backend (SIMD²-w/-CUDA-cores analogue) vs 'xla' backend
+(SIMD²-unit analogue: MXU rewrites + blocked contraction).  Reports measured
+CPU speedup and the v5e-modeled speedup (see benchmarks/common.py).
+Paper reference: gain saturating ≈10× at ≥4096², up to 15.8× for
+min-max/max-min/or-and, ≈3.1× for mma/addnorm.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, gmean, modeled_speedup, timeit
+from repro.core import ALL_OPS
+from repro.core.mmo import mmo
+
+SIZES = (256, 512, 1024)
+
+
+def run(sizes=SIZES, ops=ALL_OPS, iters=3):
+  rng = np.random.default_rng(0)
+  rows = []
+  for n in sizes:
+    speedups = []
+    for op in ops:
+      a = rng.standard_normal((n, n)).astype(np.float32)
+      b = rng.standard_normal((n, n)).astype(np.float32)
+      if op == "orand":
+        a, b = a > 1.2, b > 1.2
+      aj, bj = jnp.asarray(a), jnp.asarray(b)
+      t_vec = timeit(lambda: mmo(aj, bj, op=op, backend="vector"),
+                     iters=iters)
+      t_xla = timeit(lambda: mmo(aj, bj, op=op, backend="xla"), iters=iters)
+      meas = t_vec / t_xla
+      model = modeled_speedup(op, n, n, n)
+      speedups.append(model)
+      rows.append(csv_row(f"fig9/{op}/{n}", t_xla * 1e6,
+                          f"measured_x{meas:.2f};modeled_x{model:.2f}"))
+    rows.append(csv_row(f"fig9/gmean/{n}", 0.0,
+                        f"modeled_gmean_x{gmean(speedups):.2f}"))
+  return rows
+
+
+def main():
+  for r in run():
+    print(r)
+
+
+if __name__ == "__main__":
+  main()

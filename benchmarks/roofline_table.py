@@ -1,0 +1,61 @@
+"""§Roofline artifact: render the per-(arch × shape × mesh) three-term
+roofline table from the dry-run JSON results (results/<tag>/*.json).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [tag ...]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import csv_row
+
+_SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                "long_500k": 3}
+
+
+def load(tag: str):
+  rows = []
+  for f in sorted(glob.glob(os.path.join("results", tag, "*.json"))):
+    rows.append(json.load(open(f)))
+  return sorted(rows, key=lambda r: (_SHAPE_ORDER.get(r["shape"], 9),
+                                     r["arch"]))
+
+
+def render(tag: str):
+  out = []
+  rows = load(tag)
+  if not rows:
+    out.append(csv_row(f"roofline/{tag}/MISSING", 0.0,
+                       "run repro.launch.dryrun --all first"))
+    return out
+  for r in rows:
+    cell = f"roofline/{tag}/{r['arch']}/{r['shape']}"
+    if r["status"] == "skipped":
+      out.append(csv_row(cell, 0.0, f"SKIP:{r['reason'][:60]}"))
+      continue
+    if r["status"] != "ok":
+      out.append(csv_row(cell, 0.0, f"FAILED:{r.get('error', '')[:80]}"))
+      continue
+    mem_g = (r.get("peak_mem_per_dev") or 0) / 2 ** 30
+    out.append(csv_row(
+        cell, r["t_bound_s"] * 1e6 if "t_bound_s" in r else
+        max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+        f"tC={r['t_compute_s']:.3g};tM={r['t_memory_s']:.3g};"
+        f"tX={r['t_collective_s']:.3g};bneck={r['bottleneck']};"
+        f"useful={r['useful_ratio']:.2f};mfu_bound={r['mfu_bound']:.3f};"
+        f"mem={mem_g:.1f}GiB"))
+  return out
+
+
+def main(tags=None):
+  tags = tags or ["final_single", "final_multi"]
+  for t in tags:
+    for r in render(t):
+      print(r)
+
+
+if __name__ == "__main__":
+  main(sys.argv[1:] or None)

@@ -1,0 +1,42 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
+  Fig 9   microbench_square     Fig 12  algo_opts
+  Fig 10  microbench_shapes     Fig 13/14  sparse_bench
+  Fig 11  apps_bench            Table 5 area_table
+  §Roofline  roofline_table (from dry-run artifacts, if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+  from benchmarks import (algo_opts, apps_bench, area_table,
+                          microbench_shapes, microbench_square,
+                          roofline_table, sparse_bench)
+  print("name,us_per_call,derived")
+  suites = (
+      ("fig9", microbench_square.main),
+      ("fig10", microbench_shapes.main),
+      ("fig11", apps_bench.main),
+      ("fig12", algo_opts.main),
+      ("fig13_14", sparse_bench.main),
+      ("table5", area_table.main),
+      ("roofline", roofline_table.main),
+  )
+  failed = []
+  for name, fn in suites:
+    try:
+      fn()
+    except Exception:  # noqa: BLE001
+      failed.append(name)
+      print(f"{name}/SUITE_FAILED,0.0,", file=sys.stderr)
+      traceback.print_exc()
+  if failed:
+    raise SystemExit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,64 @@
+"""Fig 13/14: sparse SIMD².
+
+Fig 13 arm — 2:4 structured sparsity: SIMD² ops on pruned inputs; measured
+compacted-contraction time + the modeled 2× sparse-unit throughput applied
+to the dense roofline (paper: 1.67–1.9× over dense SIMD²).
+Fig 14 arm — density crossover: dense MMO vs CSR SpMM (numpy stand-in for
+cuSparse) across sparsity levels (paper: crossover ≈99% at 4096²)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.core.mmo import mmo
+from repro.core.sparse import csr_spmm_np, mmo_sparse24, prune_24, to_csr
+
+
+def run_24(n: int = 512, iters=2):
+  rng = np.random.default_rng(2)
+  rows = []
+  for op in ("mma", "minplus", "maxmin"):
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    vals, idx = prune_24(aj)
+    t_dense = timeit(lambda: mmo(aj, bj, op=op), iters=iters)
+    t_24 = timeit(lambda: mmo_sparse24(vals, idx, bj, op=op), iters=iters)
+    # sparse-unit model: ⊗ throughput doubles, memory term unchanged
+    rows.append(csv_row(
+        f"fig13/{op}/{n}", t_24 * 1e6,
+        f"measured_x{t_dense / t_24:.2f};modeled_sparse_unit_x2.0"))
+  return rows
+
+
+def run_crossover(n: int = 512, densities=(0.5, 0.1, 0.02, 0.01, 0.005),
+                  iters=1):
+  rng = np.random.default_rng(3)
+  rows = []
+  b = rng.standard_normal((n, n)).astype(np.float32)
+  bj = jnp.asarray(b)
+  for d in densities:
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a[rng.random((n, n)) >= d] = 0.0
+    aj = jnp.asarray(a)
+    t_dense = timeit(lambda: mmo(aj, bj, op="mma"), iters=iters)
+    indptr, indices, data = to_csr(a)
+    t0 = time.perf_counter()
+    csr_spmm_np(indptr, indices, data, b)
+    t_csr = time.perf_counter() - t0
+    rows.append(csv_row(
+        f"fig14/sparsity{1 - d:.3f}/{n}", t_dense * 1e6,
+        f"csr_over_dense_x{t_dense / t_csr:.3f};dense_wins={t_dense < t_csr}"))
+  return rows
+
+
+def main():
+  for r in run_24() + run_crossover():
+    print(r)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,31 @@
+"""Render markdown roofline tables from dry-run JSON dirs (EXPERIMENTS.md)."""
+import glob, json, os, sys
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+def rows(tag):
+    rs = [json.load(open(f)) for f in glob.glob(f"results/{tag}/*.json")]
+    return sorted(rs, key=lambda r: (ORDER.get(r["shape"], 9), r["arch"]))
+
+def md(tag):
+    out = [f"### {tag}", "",
+           "| arch | shape | t_compute | t_memory | t_coll | bottleneck | mem/dev | useful | MFU-bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows(tag):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | *skip: {r['reason'][:48]}…* | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        mem = (r.get("peak_mem_per_dev") or 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} s | "
+            f"{r['t_memory_s']:.3g} s | {r['t_collective_s']:.3g} s | "
+            f"**{r['bottleneck']}** | {mem:.1f} GiB | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']*100:.2f}% |")
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    for tag in sys.argv[1:] or ["final_single", "final_multi"]:
+        print(md(tag)); print()

@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + decode through launch/serve.Engine
+with a reduced config (same code path the decode_* dry-run shapes lower).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main(argv=None):
+  argv = argv or sys.argv[1:]
+  if not any(a.startswith("--arch") for a in argv):
+    argv = ["--arch", "tinyllama-1.1b"] + argv
+  return serve_mod.main(argv + ["--smoke", "--batch", "4",
+                                "--prompt-len", "24", "--gen", "16"])
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,8 @@
+"""repro — SIMD² (generalized matrix instructions) as a multi-pod JAX framework.
+
+Layers: core (semiring mmo + closures + distribution), kernels (Pallas TPU),
+apps (the paper's 8 workloads), models/configs (10 assigned architectures),
+train/data/launch (distributed substrate), roofline (compiled-HLO analysis).
+"""
+
+__version__ = "1.0.0"

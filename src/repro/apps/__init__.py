@@ -1,0 +1,7 @@
+"""The paper's 8 benchmark applications, SIMD²-ized + independent baselines."""
+from repro.apps import baselines, graphs
+from repro.apps.solvers import (ALL_APPS, aplp, apsp, gtc, knn, maxcp, maxrp,
+                                minrp, mst_edges, mst_minimax)
+
+__all__ = ["ALL_APPS", "apsp", "aplp", "maxcp", "maxrp", "minrp",
+           "mst_minimax", "mst_edges", "gtc", "knn", "baselines", "graphs"]

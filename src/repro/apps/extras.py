@@ -1,0 +1,68 @@
+"""The remaining Table-1 applications: matrix inverse (plus-multiply ring)
+and k-means (add-norm), completing the paper's application taxonomy.
+
+  * ``newton_inverse`` — Newton–Schulz iteration X ← X(2I − AX): pure mma
+    MMOs, quadratic convergence; the paper lists matrix inversion as a
+    plus-multiply-ring workload.
+  * ``kmeans`` — Lloyd's algorithm where the assignment step is the SIMD²
+    ``addnorm`` instruction (pairwise squared-L2 + argmin), the same kernel
+    as KNN / chameleon's VQ tokenizer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mmo import mmo
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "backend"))
+def newton_inverse(a: Array, *, iters: int = 32, backend: str = "auto"):
+  """A⁻¹ by Newton–Schulz: X₀ = Aᵀ/(‖A‖₁‖A‖∞); Xₖ₊₁ = Xₖ(2I − A Xₖ).
+
+  Every step is two mma MMOs. Returns (inverse, residual ‖AX−I‖∞)."""
+  n = a.shape[-1]
+  norm1 = jnp.max(jnp.sum(jnp.abs(a), axis=-2))
+  norminf = jnp.max(jnp.sum(jnp.abs(a), axis=-1))
+  x = a.T / (norm1 * norminf)
+  eye2 = 2.0 * jnp.eye(n, dtype=a.dtype)
+
+  def body(_, x):
+    ax = mmo(a, x, op="mma", backend=backend)          # A @ X
+    return mmo(x, eye2 - ax, op="mma", backend=backend)  # X(2I − AX)
+
+  x = jax.lax.fori_loop(0, iters, body, x)
+  resid = jnp.max(jnp.abs(mmo(a, x, op="mma", backend=backend) -
+                          jnp.eye(n, dtype=a.dtype)))
+  return x, resid
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "backend"))
+def kmeans(points: Array, *, k: int, iters: int = 20, seed: int = 0,
+           backend: str = "auto"):
+  """Lloyd's k-means; the assignment step is SIMD².addnorm + argmin.
+
+  points: (N, D).  Returns (centroids (k, D), assignments (N,), inertia)."""
+  n, d = points.shape
+  key = jax.random.PRNGKey(seed)
+  init_idx = jax.random.choice(key, n, (k,), replace=False)
+  cents = points[init_idx]
+
+  def step(_, cents):
+    d2 = mmo(points, cents.T, op="addnorm", backend=backend)   # (N, k)
+    assign = jnp.argmin(d2, axis=-1)
+    onehot = jax.nn.one_hot(assign, k, dtype=points.dtype)     # (N, k)
+    sums = onehot.T @ points                                    # (k, D)
+    counts = jnp.sum(onehot, axis=0)[:, None]
+    new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cents)
+    return new
+
+  cents = jax.lax.fori_loop(0, iters, step, cents)
+  d2 = mmo(points, cents.T, op="addnorm", backend=backend)
+  assign = jnp.argmin(d2, axis=-1)
+  inertia = jnp.sum(jnp.min(d2, axis=-1))
+  return cents, assign, inertia

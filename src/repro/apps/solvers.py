@@ -1,0 +1,113 @@
+"""SIMD²-ized solvers for the paper's 8 applications (§5.2).
+
+Each solver is "the Figure-7 host program" in JAX: prepare the adjacency for
+its ring, run a closure built from SIMD² MMOs (Leyzorek by default, AP
+Bellman-Ford / Floyd-Warshall selectable), and post-process.  ``backend``
+forwards to core.mmo ('xla' = MXU-rewrites + blocked vector, 'vector' = the
+SIMD²-w/-CUDA-cores arm, 'pallas' = the SIMD²-unit kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import closure as cl
+from repro.core.mmo import mmo
+
+_ALGOS = ("leyzorek", "bellman_ford", "floyd_warshall")
+
+
+def _closure(adj, *, op, algorithm="leyzorek", convergence=True,
+             backend="auto", max_iters=None):
+  if algorithm == "leyzorek":
+    out, it = cl.leyzorek_closure(adj, op=op, backend=backend,
+                                  check_convergence=convergence,
+                                  max_iters=max_iters)
+  elif algorithm == "bellman_ford":
+    out, it = cl.bellman_ford_closure(adj, op=op, backend=backend,
+                                      check_convergence=convergence,
+                                      max_iters=max_iters)
+  elif algorithm == "floyd_warshall":
+    out, it = cl.floyd_warshall(adj, op=op), adj.shape[-1]
+  else:
+    raise ValueError(f"algorithm must be one of {_ALGOS}")
+  return out, it
+
+
+def apsp(w, **kw):
+  """All-pairs shortest paths — SIMD².minplus (w: +inf for missing, 0 diag)."""
+  adj = cl.prepare_adjacency(jnp.asarray(w), op="minplus")
+  return _closure(adj, op="minplus", **kw)
+
+
+def aplp(w, **kw):
+  """All-pairs longest (critical) paths on a DAG — SIMD².maxplus."""
+  adj = cl.prepare_adjacency(jnp.asarray(w), op="maxplus")
+  return _closure(adj, op="maxplus", **kw)
+
+
+def maxcp(c, **kw):
+  """Maximum capacity (widest) paths — SIMD².maxmin."""
+  adj = cl.prepare_adjacency(jnp.asarray(c), op="maxmin")
+  return _closure(adj, op="maxmin", **kw)
+
+
+def maxrp(p, **kw):
+  """Maximum reliability paths — SIMD².maxmul (p: 0 for missing, 1 diag)."""
+  adj = cl.prepare_adjacency(jnp.asarray(p), op="maxmul")
+  return _closure(adj, op="maxmul", **kw)
+
+
+def minrp(p, **kw):
+  """Minimum reliability paths — SIMD².minmul (p: +inf for missing, 1 diag)."""
+  adj = cl.prepare_adjacency(jnp.asarray(p), op="minmul")
+  return _closure(adj, op="minmul", **kw)
+
+
+def mst_minimax(w, **kw):
+  """Min-max closure: minimax (bottleneck) path matrix — SIMD².minmax."""
+  adj = cl.prepare_adjacency(jnp.asarray(w), op="minmax")
+  return _closure(adj, op="minmax", **kw)
+
+
+def mst_edges(w, **kw):
+  """Minimum spanning tree via the cycle property: for unique weights, edge
+  (i,j) ∈ MST ⟺ w(i,j) equals the minimax path value between i and j."""
+  mm, it = mst_minimax(w, **kw)
+  w = jnp.asarray(w)
+  finite = jnp.isfinite(w)
+  in_mst = finite & (w <= mm) & ~jnp.eye(w.shape[0], dtype=bool)
+  return in_mst, it
+
+
+def gtc(adj, **kw):
+  """Graph transitive (reflexive) closure — SIMD².orand."""
+  a = cl.prepare_adjacency(jnp.asarray(adj), op="orand")
+  return _closure(a, op="orand", **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def knn(ref, qry, *, k: int, backend: str = "auto"):
+  """K-nearest neighbours — SIMD².addnorm + top-k.
+
+  Returns (sq-dists (Q,k), indices (Q,k)) ascending."""
+  d2 = mmo(jnp.asarray(qry), jnp.asarray(ref).T, op="addnorm",
+           backend=backend)
+  neg, idx = jax.lax.top_k(-d2, k)
+  return -neg, idx
+
+
+ALL_APPS = {
+    "apsp": apsp,
+    "aplp": aplp,
+    "mcp": maxcp,
+    "maxrp": maxrp,
+    "minrp": minrp,
+    "mst": mst_minimax,
+    "gtc": gtc,
+    "knn": knn,
+}

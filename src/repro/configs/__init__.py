@@ -1,0 +1,70 @@
+"""Config registry: 10 assigned architectures + the paper's own workloads.
+
+Each ``<arch>.py`` exports:
+  CONFIG          — the exact published configuration (full scale)
+  smoke_config()  — a reduced same-family config for CPU tests
+Shapes (per assignment) and per-arch skip rules live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+_ARCHS = {
+    "mamba2-780m": "mamba2_780m",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "granite-8b": "granite_8b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "zamba2-7b": "zamba2_7b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+  name: str
+  seq_len: int
+  global_batch: int
+  kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic/bounded-state attention: run for SSM/hybrid
+# and SWA archs, skip for pure full-attention archs (recorded in DESIGN.md §4
+# and in the dry-run/roofline tables).
+LONG_OK = {"mamba2-780m", "zamba2-7b", "mixtral-8x7b", "h2o-danube-1.8b"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+  if shape == "long_500k" and arch not in LONG_OK:
+    return "pure full-attention arch: 524k dense-KV decode is not sub-quadratic"
+  return None
+
+
+def list_archs():
+  return list(_ARCHS)
+
+
+def cells():
+  """All (arch, shape) cells incl. skipped ones (with reasons)."""
+  out = []
+  for a in _ARCHS:
+    for s in SHAPES:
+      out.append((a, s, skip_reason(a, s)))
+  return out
+
+
+def get_config(name: str, smoke: bool = False):
+  mod = importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+  return mod.smoke_config() if smoke else mod.CONFIG

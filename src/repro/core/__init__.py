@@ -1,0 +1,21 @@
+"""SIMD² core: semiring registry, mmo API, closure solvers, distribution."""
+from repro.core.semiring import ALL_OPS, Semiring, get as get_semiring
+from repro.core.mmo import mmo, mmo_reference
+from repro.core.closure import (
+    bellman_ford_closure,
+    floyd_warshall,
+    leyzorek_closure,
+    prepare_adjacency,
+)
+
+__all__ = [
+    "ALL_OPS",
+    "Semiring",
+    "get_semiring",
+    "mmo",
+    "mmo_reference",
+    "leyzorek_closure",
+    "bellman_ford_closure",
+    "floyd_warshall",
+    "prepare_adjacency",
+]

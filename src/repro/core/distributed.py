@@ -1,0 +1,166 @@
+"""Distributed SIMD² — semiring matmuls and closures on a device mesh.
+
+The paper scales SIMD² across SMs inside one GPU; at pod scale the analogous
+question is how the ⊕/⊗ contraction maps onto collectives.  Because every
+SIMD² ⊕ is one of {+, min, max, or}, **the cross-device reduction is always
+expressible as psum/pmin/pmax** — a "generalized matmul" needs only a
+generalized all-reduce.  Three schedules are provided:
+
+  * ``mmo_kspan``      — K-sharded: local partial contraction then a single
+                         ⊕-all-reduce.  Minimum collective volume when K is
+                         the big axis (one M×N reduce).
+  * ``summa_mmo``      — 2-D blocked SUMMA: A row-panels all-gathered along
+                         the model axis, B col-panels along the data axis,
+                         local contraction on (M/p, K)×(K, N/q) blocks.
+                         This is the workhorse for distributed closures where
+                         the *same* matrix is squared (Leyzorek), since C
+                         stays 2-D-sharded in place across iterations.
+  * ``ring_mmo``       — SUMMA with the all-gather replaced by K-step
+                         collective_permute so each chunk's contraction
+                         overlaps the transfer of the next (compute/comm
+                         overlap; the beyond-paper schedule measured in
+                         EXPERIMENTS.md §Perf).
+
+All three return bit-identical results (tests assert so on a host-device
+mesh) and accept every registered op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.mmo import mmo as _mmo
+from repro.core import semiring as sr_mod
+
+shard_map = jax.shard_map if hasattr(jax, "shard_map") else (
+    jax.experimental.shard_map.shard_map)  # pragma: no cover
+
+Array = jax.Array
+
+
+def _local_contract(a, b, sr_name, backend):
+  return _mmo(a, b, None, op=sr_name, backend=backend)
+
+
+def mmo_kspan(a: Array, b: Array, c: Optional[Array], *, op: str, mesh: Mesh,
+              axis: str = "model", backend: str = "auto") -> Array:
+  """K-sharded contraction + ⊕-all-reduce along ``axis``.
+
+  A: (M, K) sharded on K over ``axis``; B: (K, N) sharded on K; C/D
+  replicated along ``axis``.
+  """
+  sr = sr_mod.get(op)
+
+  def kernel(a_blk, b_blk, c_blk):
+    part = _local_contract(a_blk, b_blk, sr.name, backend)
+    full = sr_mod.oplus_allreduce(sr, part, axis)
+    if c_blk is not None:
+      full = sr.oplus(full, c_blk.astype(full.dtype))
+    return full
+
+  in_specs = (P(None, axis), P(axis, None),
+              None if c is None else P(None, None))
+  fn = shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                 out_specs=P(None, None))
+  return fn(a, b, c)
+
+
+def summa_mmo(a: Array, b: Array, c: Optional[Array], *, op: str, mesh: Mesh,
+              row_axis: str = "data", col_axis: str = "model",
+              backend: str = "auto") -> Array:
+  """2-D SUMMA: operands and result all 2-D block-sharded (row_axis, col_axis).
+
+  Per device: all-gather A's K-panels along ``col_axis`` (row broadcast) and
+  B's K-panels along ``row_axis`` (column broadcast), contract locally.
+  """
+  sr = sr_mod.get(op)
+
+  def kernel(a_blk, b_blk, c_blk):
+    a_row = jax.lax.all_gather(a_blk, col_axis, axis=1, tiled=True)
+    b_col = jax.lax.all_gather(b_blk, row_axis, axis=0, tiled=True)
+    out = _local_contract(a_row, b_col, sr.name, backend)
+    if c_blk is not None:
+      out = sr.oplus(out, c_blk.astype(out.dtype))
+    return out
+
+  spec = P(row_axis, col_axis)
+  fn = shard_map(kernel, mesh=mesh,
+                 in_specs=(spec, spec, None if c is None else spec),
+                 out_specs=spec)
+  return fn(a, b, c)
+
+
+def ring_mmo(a: Array, b: Array, c: Optional[Array], *, op: str, mesh: Mesh,
+             axis: str = "model", backend: str = "auto") -> Array:
+  """1-D ring schedule: B K-sharded along ``axis`` and rotating; device j owns
+  output columns C[:, Nj] and ⊕-accumulates one K-chunk's contribution per
+  step.  Each step's contraction overlaps the next chunk's collective-permute
+  (the overlapped alternative to SUMMA's blocking all-gather; compared in
+  EXPERIMENTS.md §Perf)."""
+  sr = sr_mod.get(op)
+  n_dev = mesh.shape[axis]
+
+  def kernel(a_blk, b_blk, c_blk):
+    # a_blk: (M, K) replicated; b_blk: (K/p, N) rotating K-chunk.
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    k_chunk = b_blk.shape[0]
+    n_cols = b_blk.shape[1] // n_dev  # my output column block
+
+    def step(i, state):
+      b_cur, acc = state
+      # after i forward rotations the chunk held here originated at device
+      # (idx - i) mod p → it holds K rows [src*k_chunk, ...).
+      src = (idx - i) % n_dev
+      a_piece = jax.lax.dynamic_slice_in_dim(a_blk, src * k_chunk, k_chunk, 1)
+      b_cols = jax.lax.dynamic_slice_in_dim(b_cur, idx * n_cols, n_cols, 1)
+      part = _local_contract(a_piece, b_cols, sr.name, backend)
+      acc = sr.oplus(acc, part.astype(acc.dtype))
+      b_nxt = jax.lax.ppermute(b_cur, axis, perm)
+      return b_nxt, acc
+
+    m = a_blk.shape[0]
+    acc0 = sr.identity_like((m, n_cols), sr.acc_dtype(a_blk.dtype))
+    acc0 = jax.lax.pvary(acc0, (axis,))
+    _, acc = jax.lax.fori_loop(0, n_dev, step, (b_blk, acc0))
+    if c_blk is not None:
+      acc = sr.oplus(acc, c_blk.astype(acc.dtype))
+    return acc
+
+  in_specs = (P(None, None), P(axis, None),
+              None if c is None else P(None, axis))
+  fn = shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                 out_specs=P(None, axis))
+  return fn(a, b, c)
+
+
+# ---------------------------------------------------------------------------
+# Distributed closure (Leyzorek on a 2-D-sharded matrix via SUMMA squaring).
+# ---------------------------------------------------------------------------
+
+
+def distributed_leyzorek(adj: Array, *, op: str, mesh: Mesh,
+                         row_axis: str = "data", col_axis: str = "model",
+                         max_iters: Optional[int] = None,
+                         backend: str = "auto"):
+  """C ← C ⊕ (C ⊗ C) with C living 2-D-sharded across the mesh the whole
+  time; only K-panels move (SUMMA all-gathers) per iteration."""
+  import math
+  n = adj.shape[-1]
+  iters = max_iters if max_iters is not None else max(
+      1, math.ceil(math.log2(max(n, 2))))
+
+  @functools.partial(jax.jit, donate_argnums=0)
+  def run(c):
+    def body(_, cur):
+      return summa_mmo(cur, cur, cur, op=op, mesh=mesh, row_axis=row_axis,
+                       col_axis=col_axis, backend=backend)
+    return jax.lax.fori_loop(0, iters, body, c)
+
+  spec = jax.sharding.NamedSharding(mesh, P(row_axis, col_axis))
+  adj = jax.device_put(adj, spec)
+  return run(adj)

@@ -1,0 +1,174 @@
+"""``mmo`` — the SIMD² matrix-matrix-operation API (paper §3.2/§4).
+
+``D = C ⊕ (A ⊗ B)`` with A: (..., M, K), B: (..., K, N), C/D: (..., M, N).
+
+Backends (selected via ``backend=``):
+
+  'vector'  — blocked broadcast-⊗ + ⊕-reduce.  This is the TPU analogue of
+              the paper's "SIMD² w/ CUDA cores" arm: correct on any platform,
+              no MXU, O(M·bk·N) live intermediate per K-block.
+  'xla'     — MXU-reuse rewrites where an exact one exists (mma → jnp.matmul,
+              addnorm → ‖a‖²+‖b‖²−2ab expansion, orand → count>0), otherwise
+              falls back to 'vector'.  This is the production path on CPU and
+              the non-Pallas path on TPU.
+  'pallas'  — the generic Pallas semiring kernel (kernels/semiring_mmo.py),
+              the TPU-native embodiment of a SIMD² unit.  ``interpret=True``
+              on CPU.
+  'auto'    — 'xla' (the dispatcher that a compiler targeting SIMD² hardware
+              would implement).
+
+All backends produce identical results (tests sweep ops × shapes × dtypes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sr_mod
+
+Array = jax.Array
+
+_DEFAULT_BLOCK_K = 512
+
+
+def _check_shapes(a, b, c):
+  if a.ndim < 2 or b.ndim < 2:
+    raise ValueError(f"mmo operands must be >=2D, got {a.shape} {b.shape}")
+  if a.shape[-1] != b.shape[-2]:
+    raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+  m, n = a.shape[-2], b.shape[-1]
+  if c is not None and c.shape[-2:] != (m, n):
+    raise ValueError(f"C shape {c.shape} != ({m},{n})")
+
+
+# ---------------------------------------------------------------------------
+# vector backend: blocked broadcast/reduce.
+# ---------------------------------------------------------------------------
+
+
+def _contract_vector(a: Array, b: Array, sr: sr_mod.Semiring,
+                     block_k: int) -> Array:
+  """⊕_k ⊗(a[..,m,k], b[..,k,n]) by scanning K blocks."""
+  *batch, m, k = a.shape
+  n = b.shape[-1]
+  acc_dtype = sr.acc_dtype(a.dtype)
+  block_k = min(block_k, k)
+  nblocks, rem = divmod(k, block_k)
+
+  def blk(a_blk, b_blk):
+    # (..., m, bk, 1) ⊗ (..., 1, bk, n) → ⊕ over bk
+    prod = sr.otimes(a_blk[..., :, :, None].astype(acc_dtype),
+                     b_blk[..., None, :, :].astype(acc_dtype))
+    return sr_mod.oplus_reduce(sr, prod, axis=-2)
+
+  # Initialize from the first block (not the ⊕-identity) so the accumulator
+  # inherits the operands' types — incl. shard_map varying-axis annotations.
+  a_main = a[..., : nblocks * block_k].reshape(*batch, m, nblocks, block_k)
+  b_main = b[..., : nblocks * block_k, :].reshape(*batch, nblocks, block_k, n)
+  out = blk(a_main[..., :, 0, :], b_main[..., 0, :, :])
+
+  if nblocks > 1:
+    def body(i, acc):
+      part = blk(a_main[..., :, i, :], b_main[..., i, :, :])
+      return sr.oplus(acc, part)
+
+    out = jax.lax.fori_loop(1, nblocks, body, out)
+  if rem:
+    out = sr.oplus(out, blk(a[..., nblocks * block_k:],
+                            b[..., nblocks * block_k:, :]))
+  return out
+
+
+# ---------------------------------------------------------------------------
+# MXU-reuse rewrites (exact; see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+
+def _contract_matmul(a: Array, b: Array, sr: sr_mod.Semiring) -> Array:
+  del sr
+  return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def _contract_addnorm(a: Array, b: Array, sr: sr_mod.Semiring) -> Array:
+  """Σ_k (a−b)² = Σa² − 2Σab + Σb² — the O(K·M·N) term rides the MXU."""
+  del sr
+  ab = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+  a2 = jnp.sum(jnp.square(a.astype(jnp.float32)), axis=-1, keepdims=True)
+  b2 = jnp.sum(jnp.square(b.astype(jnp.float32)), axis=-2, keepdims=True)
+  return a2 - 2.0 * ab + b2
+
+
+def _contract_orand(a: Array, b: Array, sr: sr_mod.Semiring) -> Array:
+  """or-and over {0,1} == (#k: a∧b) > 0 — a thresholded MXU matmul."""
+  del sr
+  af = a.astype(jnp.bfloat16) if a.dtype == jnp.bool_ else (a != 0).astype(
+      jnp.bfloat16)
+  bf = b.astype(jnp.bfloat16) if b.dtype == jnp.bool_ else (b != 0).astype(
+      jnp.bfloat16)
+  cnt = jnp.matmul(af, bf, preferred_element_type=jnp.float32)
+  return cnt > 0.5
+
+_REWRITES = {
+    "matmul": _contract_matmul,
+    "addnorm": _contract_addnorm,
+    "orand": _contract_orand,
+}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "block_k", "interpret"))
+def mmo(a: Array,
+        b: Array,
+        c: Optional[Array] = None,
+        *,
+        op="mma",
+        backend: str = "auto",
+        block_k: int = _DEFAULT_BLOCK_K,
+        interpret: Optional[bool] = None) -> Array:
+  """D = C ⊕ (A ⊗ B).  See module docstring for backend semantics."""
+  sr = sr_mod.get(op)
+  _check_shapes(a, b, c)
+  if sr.boolean:
+    a = a.astype(jnp.bool_) if a.dtype != jnp.bool_ else a
+    b = b.astype(jnp.bool_) if b.dtype != jnp.bool_ else b
+
+  if backend == "auto":
+    backend = "xla"
+
+  if backend == "pallas":
+    from repro.kernels import ops as kops  # local import: kernels optional
+    out = kops.semiring_mmo(a, b, op=sr.name, interpret=interpret)  # auto on CPU
+  elif backend == "xla" and sr.mxu_rewrite is not None:
+    out = _REWRITES[sr.mxu_rewrite](a, b, sr)
+  elif backend in ("xla", "vector"):
+    out = _contract_vector(a, b, sr, block_k)
+  else:
+    raise ValueError(f"unknown backend {backend!r}")
+
+  if c is not None:
+    out = sr.oplus(out, c.astype(out.dtype))
+  return out
+
+
+def mmo_reference(a, b, c=None, *, op="mma"):
+  """Unblocked O(MKN)-memory oracle (tests only)."""
+  sr = sr_mod.get(op)
+  acc = sr.acc_dtype(a.dtype)
+  if sr.boolean:
+    a, b = a.astype(jnp.bool_), b.astype(jnp.bool_)
+    prod = sr.otimes(a[..., :, :, None], b[..., None, :, :])
+  else:
+    prod = sr.otimes(a[..., :, :, None].astype(acc),
+                     b[..., None, :, :].astype(acc))
+  out = sr_mod.oplus_reduce(sr, prod, axis=-2)
+  if c is not None:
+    out = sr.oplus(out, c.astype(out.dtype))
+  return out

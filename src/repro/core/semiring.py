@@ -1,0 +1,230 @@
+"""Semiring-like structure registry — the heart of SIMD².
+
+The paper (§2.1) identifies the algebraic structure ``D = C ⊕ (A ⊗ B)``
+where ⊕ is an addition-like reduction and ⊗ a multiplication-like element
+op contracted over the inner (k) dimension.  Nine (⊕, ⊗) pairs are exposed
+as SIMD² instructions (paper Table 2); this module is the software registry
+for those nine ops plus their algebraic metadata (identities, dtype rules,
+MXU-rewrite availability) used by every higher layer (mmo dispatch, Pallas
+kernels, closure solvers, distributed collectives, area model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Element operators.  Each takes broadcastable arrays and returns an array.
+# ---------------------------------------------------------------------------
+
+
+def _sq_diff(a: Array, b: Array) -> Array:
+  d = a - b
+  return d * d
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+  """One SIMD² (⊕, ⊗) pair.
+
+  Attributes:
+    name:            instruction mnemonic (paper Table 2, e.g. ``minplus``).
+    oplus:           reduction operator (addition-like, associative+commutative).
+    otimes:          element operator applied before the k-contraction.
+    oplus_identity:  identity element of ``oplus`` (used to pad / init tiles).
+    algorithm:       representative algorithm from paper Table 1 (docs only).
+    boolean:         operates on {0,1}/bool lattice (or-and).
+    mxu_rewrite:     name of an exact MXU-reuse rewrite ('matmul', 'addnorm',
+                     'orand') or None when the op is VPU-only (min/max family).
+    accumulate_f32:  paper semantics: 16-bit in, 32-bit out.  min/max-based
+                     rings keep the input dtype ordering so they may stay in
+                     input precision; (+)-reductions must widen.
+  """
+
+  name: str
+  oplus: Callable[[Array, Array], Array]
+  otimes: Callable[[Array, Array], Array]
+  oplus_identity: float
+  algorithm: str
+  boolean: bool = False
+  mxu_rewrite: Optional[str] = None
+  accumulate_f32: bool = True
+
+  # -- helpers -------------------------------------------------------------
+  def identity_like(self, shape, dtype) -> Array:
+    if self.boolean:
+      return jnp.zeros(shape, dtype=jnp.bool_)
+    return jnp.full(shape, self.oplus_identity, dtype=dtype)
+
+  def acc_dtype(self, in_dtype) -> jnp.dtype:
+    if self.boolean:
+      return jnp.dtype(jnp.bool_)
+    if self.accumulate_f32 and jnp.issubdtype(in_dtype, jnp.floating):
+      return jnp.dtype(jnp.float32)
+    return jnp.dtype(in_dtype)
+
+
+_REGISTRY: dict[str, Semiring] = {}
+
+
+def _register(sr: Semiring) -> Semiring:
+  _REGISTRY[sr.name] = sr
+  return sr
+
+
+MMA = _register(
+    Semiring(
+        name="mma",
+        oplus=jnp.add,
+        otimes=jnp.multiply,
+        oplus_identity=0.0,
+        algorithm="GEMM / matrix inverse",
+        mxu_rewrite="matmul",
+    )
+)
+
+MINPLUS = _register(
+    Semiring(
+        name="minplus",
+        oplus=jnp.minimum,
+        otimes=jnp.add,
+        oplus_identity=float(np.inf),
+        algorithm="all-pairs shortest paths",
+        accumulate_f32=False,
+    )
+)
+
+MAXPLUS = _register(
+    Semiring(
+        name="maxplus",
+        oplus=jnp.maximum,
+        otimes=jnp.add,
+        oplus_identity=float(-np.inf),
+        algorithm="maximum cost (critical path)",
+        accumulate_f32=False,
+    )
+)
+
+MINMUL = _register(
+    Semiring(
+        name="minmul",
+        oplus=jnp.minimum,
+        otimes=jnp.multiply,
+        oplus_identity=float(np.inf),
+        algorithm="minimum reliability paths",
+        accumulate_f32=False,
+    )
+)
+
+MAXMUL = _register(
+    Semiring(
+        name="maxmul",
+        oplus=jnp.maximum,
+        otimes=jnp.multiply,
+        oplus_identity=float(-np.inf),
+        algorithm="maximum reliability paths",
+        accumulate_f32=False,
+    )
+)
+
+MINMAX = _register(
+    Semiring(
+        name="minmax",
+        oplus=jnp.minimum,
+        otimes=jnp.maximum,
+        oplus_identity=float(np.inf),
+        algorithm="minimum spanning tree",
+        accumulate_f32=False,
+    )
+)
+
+MAXMIN = _register(
+    Semiring(
+        name="maxmin",
+        oplus=jnp.maximum,
+        otimes=jnp.minimum,
+        oplus_identity=float(-np.inf),
+        algorithm="maximum capacity paths",
+        accumulate_f32=False,
+    )
+)
+
+ORAND = _register(
+    Semiring(
+        name="orand",
+        oplus=jnp.logical_or,
+        otimes=jnp.logical_and,
+        oplus_identity=0.0,  # False
+        algorithm="transitive & reflexive closure",
+        boolean=True,
+        mxu_rewrite="orand",
+        accumulate_f32=False,
+    )
+)
+
+ADDNORM = _register(
+    Semiring(
+        name="addnorm",
+        oplus=jnp.add,
+        otimes=_sq_diff,
+        oplus_identity=0.0,
+        algorithm="L2 distance (KNN / k-means)",
+        mxu_rewrite="addnorm",
+    )
+)
+
+ALL_OPS: tuple[str, ...] = tuple(_REGISTRY)
+
+
+def get(name_or_sr) -> Semiring:
+  """Look up a semiring by mnemonic (or pass a Semiring through)."""
+  if isinstance(name_or_sr, Semiring):
+    return name_or_sr
+  try:
+    return _REGISTRY[str(name_or_sr)]
+  except KeyError:
+    raise ValueError(
+        f"unknown SIMD² op {name_or_sr!r}; available: {sorted(_REGISTRY)}"
+    ) from None
+
+
+# ---------------------------------------------------------------------------
+# ⊕ as a cross-device collective.  psum/pmin/pmax cover every SIMD² reduction
+# (or == max over {0,1}), which is what lets the distributed layer run
+# K-sharded contractions with a single generalized all-reduce (see
+# core/distributed.py).
+# ---------------------------------------------------------------------------
+
+
+def oplus_allreduce(sr, x: Array, axis_name: str) -> Array:
+  sr = get(sr)
+  if sr.boolean:
+    return jax.lax.pmax(x.astype(jnp.int8), axis_name).astype(jnp.bool_) \
+        if x.dtype == jnp.bool_ else jax.lax.pmax(x, axis_name)
+  if sr.oplus is jnp.add:
+    return jax.lax.psum(x, axis_name)
+  if sr.oplus is jnp.minimum:
+    return jax.lax.pmin(x, axis_name)
+  if sr.oplus is jnp.maximum:
+    return jax.lax.pmax(x, axis_name)
+  raise NotImplementedError(sr.name)
+
+
+def oplus_reduce(sr, x: Array, axis: int) -> Array:
+  """⊕-reduction along one axis of a single array."""
+  sr = get(sr)
+  if sr.boolean:
+    return jnp.any(x, axis=axis)
+  if sr.oplus is jnp.add:
+    return jnp.sum(x, axis=axis)
+  if sr.oplus is jnp.minimum:
+    return jnp.min(x, axis=axis)
+  if sr.oplus is jnp.maximum:
+    return jnp.max(x, axis=axis)
+  raise NotImplementedError(sr.name)

@@ -1,0 +1,82 @@
+"""Sparse SIMD² (paper §6.5): 2:4 structured sparsity + CSR crossover study.
+
+Two artifacts:
+  * ``prune_24`` / ``mmo_sparse24`` — structured 2:4 sparsity along K: keep
+    the 2 largest-|x| of every 4 A-entries, contract only those (exactly the
+    sparse-Tensor-Core execution model; on hardware this doubles ⊗-throughput
+    — the benchmark reports both the measured compacted-contraction time and
+    the modeled 2× roofline).
+  * ``csr_spgemm_np`` — a plain CSR×dense row-gather SpMM in numpy, the
+    stand-in for cuSparse in the Fig-14 density-crossover study.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as sr_mod
+
+Array = jax.Array
+
+
+def prune_24(a: Array):
+  """Keep the 2 largest-magnitude entries of each group of 4 along K.
+
+  Returns (compact (M, K/2) values, idx (M, K/2) int32 column indices)."""
+  m, k = a.shape
+  assert k % 4 == 0, k
+  g = a.reshape(m, k // 4, 4)
+  order = jnp.argsort(-jnp.abs(g), axis=-1)[..., :2]          # (M, K/4, 2)
+  order = jnp.sort(order, axis=-1)                            # keep k-order
+  vals = jnp.take_along_axis(g, order, axis=-1)               # (M, K/4, 2)
+  base = (jnp.arange(k // 4) * 4)[None, :, None]
+  idx = (order + base).reshape(m, k // 2)
+  return vals.reshape(m, k // 2), idx.astype(jnp.int32)
+
+
+def densify_24(vals: Array, idx: Array, k: int) -> Array:
+  m = vals.shape[0]
+  out = jnp.zeros((m, k), vals.dtype)
+  return out.at[jnp.arange(m)[:, None], idx].set(vals)
+
+
+def mmo_sparse24(vals: Array, idx: Array, b: Array, c=None, *,
+                 op: str = "mma") -> Array:
+  """Contract the 2:4-compacted A against dense B: per output row i the
+  needed B rows are gathered by idx[i] — half the ⊗ work of the dense op."""
+  sr = sr_mod.get(op)
+  acc = sr.acc_dtype(vals.dtype)
+  b_rows = b[idx]                                 # (M, K/2, N) gather
+  prod = sr.otimes(vals[..., None].astype(acc), b_rows.astype(acc))
+  out = sr_mod.oplus_reduce(sr, prod, axis=1)
+  if c is not None:
+    out = sr.oplus(out, c.astype(out.dtype))
+  return out
+
+
+# --- CSR SpGEMM reference (numpy; the "cuSparse arm" of Fig 14) -------------
+
+
+def to_csr(a: np.ndarray):
+  m, _ = a.shape
+  indptr = [0]
+  indices, data = [], []
+  for i in range(m):
+    nz = np.nonzero(a[i])[0]
+    indices.append(nz)
+    data.append(a[i, nz])
+    indptr.append(indptr[-1] + len(nz))
+  return (np.asarray(indptr), np.concatenate(indices) if indices else
+          np.zeros(0, np.int64), np.concatenate(data) if data else
+          np.zeros(0, a.dtype))
+
+
+def csr_spmm_np(indptr, indices, data, b: np.ndarray) -> np.ndarray:
+  m = len(indptr) - 1
+  out = np.zeros((m, b.shape[1]), np.float64)
+  for i in range(m):
+    lo, hi = indptr[i], indptr[i + 1]
+    if hi > lo:
+      out[i] = data[lo:hi] @ b[indices[lo:hi]]
+  return out

@@ -1,0 +1,4 @@
+"""Deterministic data pipeline."""
+from repro.data.pipeline import DataConfig, PackedCorpus, SyntheticLM, make_source
+
+__all__ = ["DataConfig", "PackedCorpus", "SyntheticLM", "make_source"]

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels: generic SIMD² semiring MMO + flash attention."""
+from repro.kernels.ops import flash_attention, semiring_mmo
+
+__all__ = ["flash_attention", "semiring_mmo"]

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``semiring_mmo`` / ``flash_attention`` here are the entry points the rest of
+the framework uses; on a CPU host they run in interpret mode automatically
+(the kernels themselves target TPU Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import semiring_mmo as _sm
+from repro.kernels import flash_attention as _fa
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+  return jax.default_backend() == "tpu"
+
+
+def semiring_mmo(a: Array, b: Array, c: Optional[Array] = None, *,
+                 op: str = "mma", bm: int = 128, bn: int = 128, bk: int = 128,
+                 interpret: Optional[bool] = None,
+                 faithful: bool = False) -> Array:
+  """Batched-aware Pallas MMO; vmaps leading batch dims onto the 2-D kernel."""
+  interp = (not _on_tpu()) if interpret is None else interpret
+  fn = functools.partial(_sm.semiring_mmo, op=op, bm=bm, bn=bn, bk=bk,
+                         interpret=interp, faithful=faithful)
+  nbatch = a.ndim - 2
+  for _ in range(nbatch):
+    fn = jax.vmap(fn)
+  if c is None:
+    return fn(a, b) if nbatch == 0 else fn(a, b)
+  return fn(a, b, c)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: Optional[bool] = None) -> Array:
+  interp = (not _on_tpu()) if interpret is None else interpret
+  return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                             scale=scale, bq=bq, bkv=bkv, interpret=interp)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in kernels/ is validated against these references over
+shape/dtype sweeps (tests/test_kernels.py) — the same role the paper's
+cuASR/CUTLASS "correctness validation backend" plays (§5.1.2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sr_mod
+
+Array = jax.Array
+
+
+def semiring_mmo_ref(a: Array, b: Array, c: Optional[Array] = None, *,
+                     op: str = "mma") -> Array:
+  """Unblocked D = C ⊕ (A ⊗ B) oracle."""
+  sr = sr_mod.get(op)
+  acc = sr.acc_dtype(a.dtype)
+  if sr.boolean:
+    a, b = a.astype(jnp.bool_), b.astype(jnp.bool_)
+    prod = sr.otimes(a[..., :, :, None], b[..., None, :, :])
+  else:
+    prod = sr.otimes(a[..., :, :, None].astype(acc),
+                     b[..., None, :, :].astype(acc))
+  out = sr_mod.oplus_reduce(sr, prod, axis=-2)
+  if c is not None:
+    out = sr.oplus(out, c.astype(out.dtype))
+  return out
+
+
+def addnorm_ref(a: Array, b: Array, c: Optional[Array] = None) -> Array:
+  """Pairwise squared-L2: D[i,j] = Σ_k (a[i,k] − b[k,j])² (+ C)."""
+  return semiring_mmo_ref(a, b, c, op="addnorm")
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> Array:
+  """Dense softmax attention oracle.
+
+  q: (B, H, Sq, D); k, v: (B, H, Skv, D) — head-group expansion (GQA) is the
+  wrapper's job.  Supports causal masking and sliding-window (SWA).
+  """
+  *_, sq, d = q.shape
+  skv = k.shape[-2]
+  scale = (d ** -0.5) if scale is None else scale
+  logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+  qpos = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (decode-friendly)
+  kpos = jnp.arange(skv)[None, :]
+  mask = jnp.ones((sq, skv), dtype=bool)
+  if causal:
+    mask &= kpos <= qpos
+  if window is not None:
+    mask &= kpos > qpos - window
+  logits = jnp.where(mask, logits, -jnp.inf)
+  probs = jax.nn.softmax(logits, axis=-1)
+  out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+  return out.astype(q.dtype)

@@ -1,0 +1,207 @@
+"""Generic Pallas TPU kernel for SIMD² matrix-matrix operations.
+
+This is the TPU-native embodiment of the paper's SIMD² unit (§3.1): one
+datapath (HBM→VMEM block pipeline + fp32 block accumulator resident in VMEM
+across the K grid dimension) whose ⊗/⊕ "ALU" is selected per instruction.
+
+  * mma           → the block contraction is a real MXU ``jnp.dot``.
+  * addnorm       → fused MXU rewrite in-kernel: −2·a@b plus row/col norm
+                    rank-1 corrections (O(K·M·N) work on the MXU).
+  * min/max rings → VPU rank-u updates: the (bm, u, bn) ⊗-broadcast is
+                    ⊕-reduced over u, looping u-sized K slivers (u=8 matches
+                    the VPU sublane count).
+  * orand         → runs in the float {0,1} domain with (max, min); the
+                    wrapper restores bool.
+
+Block sizes default to (bm, bn, bk) = (128, 128, 128): MXU-aligned, and the
+three resident blocks + fp32 accumulator use 128·128·(2+2+4+4) B ≈ 192 KiB of
+VMEM — small enough for Mosaic's double buffering (~0.4 MiB total) with room
+to grow bk.  K-tail padding uses per-ring pad values chosen so that
+⊗(pad_a, pad_b) equals the ⊕-identity (see ``_PADS``), making padded lanes
+algebraic no-ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import semiring as sr_mod
+
+Array = jax.Array
+
+# (pad_a, pad_b) per op with ⊗(pad_a, pad_b) == ⊕-identity (K-tail padding).
+_PADS = {
+    "mma": (0.0, 0.0),
+    "minplus": (float("inf"), float("inf")),
+    "maxplus": (float("-inf"), float("-inf")),
+    "minmul": (float("inf"), float("inf")),
+    "maxmul": (float("-inf"), float("inf")),
+    "minmax": (float("inf"), float("inf")),
+    "maxmin": (float("-inf"), float("-inf")),
+    "orand": (0.0, 0.0),
+    "addnorm": (0.0, 0.0),
+}
+
+_SUBLANES = 8  # VPU sublane count — rank-u update width.
+
+
+def _float_ring(sr: sr_mod.Semiring):
+  """or-and executes on the VPU in the float {0,1} domain as (max, min)."""
+  if sr.boolean:
+    return jnp.maximum, jnp.minimum
+  return sr.oplus, sr.otimes
+
+
+def _block_contract(sr: sr_mod.Semiring, a: Array, b: Array,
+                    acc_dtype, faithful: bool = False) -> Array:
+  """One (bm, bk) × (bk, bn) block contraction — the 'ALU' dispatch.
+
+  ``faithful=True`` forces the paper's ⊗-ALU semantics (VPU rank-u loop)
+  even for ops with an MXU rewrite — the paper-faithful baseline arm in
+  EXPERIMENTS.md §Perf.
+  """
+  if sr.name == "mma" and not faithful:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+  if sr.name == "addnorm" and not faithful:
+    # Σ(a−b)² = ‖a‖²·1ᵀ + 1·‖b‖²ᵀ − 2ab: MXU dot + rank-1 VPU corrections.
+    ab = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    a2 = jnp.sum(jnp.square(a.astype(jnp.float32)), axis=1, keepdims=True)
+    b2 = jnp.sum(jnp.square(b.astype(jnp.float32)), axis=0, keepdims=True)
+    return a2 - 2.0 * ab + b2
+
+  oplus, otimes = _float_ring(sr)
+  bm, bk = a.shape
+  bn = b.shape[1]
+  u = min(_SUBLANES, bk)
+  nsub = bk // u
+
+  def body(j, acc):
+    a_s = jax.lax.dynamic_slice(a, (0, j * u), (bm, u)).astype(acc_dtype)
+    b_s = jax.lax.dynamic_slice(b, (j * u, 0), (u, bn)).astype(acc_dtype)
+    prod = otimes(a_s[:, :, None], b_s[None, :, :])  # (bm, u, bn)
+    part = prod[:, 0, :]
+    for t in range(1, u):  # u is tiny & static: unrolled ⊕-tree
+      part = oplus(part, prod[:, t, :])
+    return oplus(acc, part)
+
+  a0 = jax.lax.dynamic_slice(a, (0, 0), (bm, u)).astype(acc_dtype)
+  b0 = jax.lax.dynamic_slice(b, (0, 0), (u, bn)).astype(acc_dtype)
+  prod0 = otimes(a0[:, :, None], b0[None, :, :])
+  acc = prod0[:, 0, :]
+  for t in range(1, u):
+    acc = oplus(acc, prod0[:, t, :])
+  return jax.lax.fori_loop(1, nsub, body, acc) if nsub > 1 else acc
+
+
+def _make_kernel(sr: sr_mod.Semiring, nk: int, acc_dtype, has_c: bool,
+                 faithful: bool = False):
+  oplus, _ = _float_ring(sr)
+
+  def kernel(*refs):
+    if has_c:
+      a_ref, b_ref, c_ref, o_ref = refs
+    else:
+      a_ref, b_ref, o_ref = refs
+      c_ref = None
+    k = pl.program_id(2)
+
+    part = _block_contract(sr, a_ref[...], b_ref[...], acc_dtype, faithful)
+
+    @pl.when(k == 0)
+    def _init():
+      if c_ref is not None:
+        o_ref[...] = oplus(part, c_ref[...].astype(acc_dtype))
+      else:
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+      o_ref[...] = oplus(o_ref[...], part)
+
+  return kernel
+
+
+def _pad_to(x: Array, m: int, n: int, val: float) -> Array:
+  pm, pn = m - x.shape[0], n - x.shape[1]
+  if pm == 0 and pn == 0:
+    return x
+  return jnp.pad(x, ((0, pm), (0, pn)), constant_values=val)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("op", "bm", "bn", "bk", "interpret", "faithful"))
+def semiring_mmo(a: Array,
+                 b: Array,
+                 c: Optional[Array] = None,
+                 *,
+                 op: str = "mma",
+                 bm: int = 128,
+                 bn: int = 128,
+                 bk: int = 128,
+                 interpret: bool = False,
+                 faithful: bool = False) -> Array:
+  """Tiled Pallas D = C ⊕ (A ⊗ B) for 2-D operands (vmap for batching)."""
+  sr = sr_mod.get(op)
+  was_bool = sr.boolean
+  in_dtype = a.dtype
+  if was_bool:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if c is not None:
+      c = c.astype(jnp.float32)
+    in_dtype = jnp.dtype(jnp.float32)
+
+  m, k = a.shape
+  n = b.shape[1]
+  bm_, bn_, bk_ = min(bm, _rup(m, 8)), min(bn, _rup(n, 128)), min(
+      bk, _rup(k, _SUBLANES))
+  mp, np_, kp = _rup(m, bm_), _rup(n, bn_), _rup(k, bk_)
+
+  pa, pb = _PADS[sr.name]
+  a_p = _pad_to(a, mp, kp, pa)
+  b_p = _pad_to(b, kp, np_, pb)
+
+  acc_dtype = jnp.float32 if sr.name in ("mma", "addnorm") else (
+      jnp.float32 if was_bool else sr.acc_dtype(in_dtype))
+  has_c = c is not None
+  if has_c:
+    c_p = _pad_to(c.astype(acc_dtype), mp, np_, 0.0)
+
+  grid = (mp // bm_, np_ // bn_, kp // bk_)
+  kernel = _make_kernel(sr, grid[2], acc_dtype, has_c, faithful)
+
+  in_specs = [
+      pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+      pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+  ]
+  operands = [a_p, b_p]
+  if has_c:
+    in_specs.append(pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)))
+    operands.append(c_p)
+
+  out = pl.pallas_call(
+      kernel,
+      grid=grid,
+      in_specs=in_specs,
+      out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+      out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
+      compiler_params=pltpu.CompilerParams(
+          dimension_semantics=("parallel", "parallel", "arbitrary")),
+      interpret=interpret,
+      name=f"simd2_{sr.name}",
+  )(*operands)
+
+  out = out[:m, :n]
+  if was_bool:
+    out = out > 0.5
+  return out
+
+
+def _rup(x: int, mult: int) -> int:
+  return ((x + mult - 1) // mult) * mult

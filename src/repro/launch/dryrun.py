@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture × input-shape × mesh)
+# cell against the production mesh, with 512 placeholder host devices (set
+# above, BEFORE any other import — jax locks the device count on first init).
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+#
+# Per cell it prints/records compiled.memory_analysis() (proves fit),
+# cost_analysis() (FLOPs/bytes for §Roofline) and the parsed collective
+# traffic (for the collective roofline term).
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import math            # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.launch import mesh as mesh_mod     # noqa: E402
+from repro.launch import specs as sp          # noqa: E402
+from repro.models import common as cm         # noqa: E402
+from repro.models import zoo                  # noqa: E402
+from repro.roofline import analysis, collectives, hlo_walk  # noqa: E402
+from repro.train import optimizer as opt_mod  # noqa: E402
+from repro.train import steps as steps_mod    # noqa: E402
+
+
+def active_params(cfg) -> float:
+  """Non-embedding active params (MoE: topk/E of expert weights)."""
+  import functools
+  shapes = jax.eval_shape(functools.partial(zoo.init, cfg),
+                          jax.random.PRNGKey(0))
+  flat = cm.tree_paths(shapes)
+  total = 0.0
+  for path, leaf in flat.items():
+    n = math.prod(leaf.shape)
+    if "embed" in path or "lm_head" in path:
+      continue
+    if "experts" in path and cfg.n_experts:
+      n = n * cfg.topk / cfg.n_experts
+    total += n
+  return total
+
+
+def _ns(mesh, tree):
+  """PartitionSpec pytree → NamedSharding pytree (P is a tuple: is_leaf)."""
+  return jax.tree.map(
+      lambda s: jax.sharding.NamedSharding(mesh, s),
+      tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# Gradient microbatching per train cell: fixed global batch, sequential
+# accumulation — the standard memory lever when activations exceed HBM at
+# accum=1 (recorded in EXPERIMENTS.md §Dry-run).
+ACCUM_OVERRIDES = {
+    ("mixtral-8x7b", "train_4k"): 4,
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 4,
+    ("chameleon-34b", "train_4k"): 8,
+    ("zamba2-7b", "train_4k"): 4,
+    ("seamless-m4t-large-v2", "train_4k"): 4,
+}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "full", accum: int = 0,
+               seq_shard_decode: bool = True, fsdp: bool = True,
+               act_seq_shard: bool = True, cfg_overrides: dict = None,
+               zero2: bool = False, grad_comm_bf16: bool = False):
+  if accum == 0:  # auto: per-cell override table, default 1
+    accum = ACCUM_OVERRIDES.get((arch, shape_name), 1)
+  cfg = configs.get_config(arch)
+  if cfg_overrides:
+    cfg = cfg.replace(**cfg_overrides)
+  shape = configs.SHAPES[shape_name]
+  par = mesh_mod.make_parallelism(multi_pod=multi_pod, fsdp=fsdp,
+                                  seq_shard_decode=seq_shard_decode,
+                                  remat=remat)
+  mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+
+  b_shapes = sp.batch_shapes(cfg, shape)
+  b_specs = sp.batch_specs(cfg, shape, par)
+  act_spec = P(par.dp, par.tp, None) if act_seq_shard else None
+
+  if shape.kind == "train":
+    oc = opt_mod.AdamWConfig()
+    step = steps_mod.make_train_step(cfg, oc, accum=accum, remat=remat,
+                                     grad_specs=sp.param_specs(cfg, par),
+                                     zero2=zero2,
+                                     grad_comm_bf16=grad_comm_bf16)
+    st_shapes = sp.train_state_shapes(cfg)
+    st_specs = _ns(mesh, sp.train_state_specs(cfg, par))
+    jitted = jax.jit(step, in_shardings=(st_specs, _ns(mesh, b_specs)),
+                     out_shardings=(st_specs, None), donate_argnums=0)
+    args = (st_shapes, b_shapes)
+  elif shape.kind == "prefill":
+    step = steps_mod.make_prefill_step(cfg)
+    p_specs = _ns(mesh, sp.param_specs(cfg, par))
+    c_specs = _ns(mesh, sp.cache_specs(cfg, par, shape))
+    out_specs = (_ns(mesh, P(par.dp_for(shape.global_batch), par.tp)), c_specs)
+    jitted = jax.jit(step, in_shardings=(p_specs, _ns(mesh, b_specs)),
+                     out_shardings=out_specs)
+    args = (sp.param_shapes(cfg), b_shapes)
+  else:  # decode
+    step = steps_mod.make_decode_step(cfg)
+    p_specs = _ns(mesh, sp.param_specs(cfg, par))
+    c_shapes = sp.cache_shapes(cfg, shape)
+    c_specs = _ns(mesh, sp.cache_specs(cfg, par, shape))
+    jitted = jax.jit(step, in_shardings=(p_specs, c_specs, _ns(mesh, b_specs)),
+                     out_shardings=(_ns(mesh, P(par.dp_for(shape.global_batch), None)), c_specs),
+                     donate_argnums=1)
+    args = (sp.param_shapes(cfg), c_shapes, b_shapes)
+
+  return cfg, shape, mesh, par, jitted, args, act_spec
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, **kw) -> dict:
+  skip = configs.skip_reason(arch, shape_name)
+  if skip:
+    return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped", "reason": skip}
+  multi_pod = mesh_kind == "multi"
+  t0 = time.time()
+  cfg, shape, mesh, par, jitted, args, act_spec = build_cell(
+      arch, shape_name, multi_pod, **kw)
+  with mesh:
+    with cm.activation_sharding(act_spec):
+      lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+  t_compile = time.time() - t0 - t_lower
+
+  mem = compiled.memory_analysis()
+  cost = compiled.cost_analysis()
+  hlo = compiled.as_text()
+  # Loop-corrected per-device costs from the compiled artifact (XLA's own
+  # cost_analysis counts while bodies once — see roofline/hlo_walk.py).
+  walked = hlo_walk.module_cost(hlo)
+  chips = math.prod(mesh.devices.shape)
+
+  flops = walked.flops
+  nbytes = walked.bytes
+  tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                 else 1)
+  mf = analysis.model_flops_estimate(active_params(cfg), shape.kind, tokens)
+
+  peak = None
+  argb = outb = tmpb = genb = None
+  if mem is not None:
+    try:
+      argb = mem.argument_size_in_bytes
+      outb = mem.output_size_in_bytes
+      tmpb = mem.temp_size_in_bytes
+      genb = mem.generated_code_size_in_bytes
+      alias = getattr(mem, "alias_size_in_bytes", 0)
+      peak = argb + outb + tmpb - alias
+    except AttributeError:
+      pass
+
+  roof = analysis.Roofline(
+      arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+      hlo_flops=flops * chips,   # walker reports the per-device program
+      hlo_bytes=nbytes * chips,
+      coll_bytes=walked.coll_bytes,
+      coll_breakdown=dict(walked.coll_breakdown),
+      model_flops=mf,
+      peak_memory_per_dev=peak,
+  )
+  row = roof.row()
+  row.update({
+      "status": "ok",
+      "lower_s": round(t_lower, 1),
+      "compile_s": round(t_compile, 1),
+      "arg_bytes": argb, "out_bytes": outb, "temp_bytes": tmpb,
+      "code_bytes": genb,
+      # raw XLA numbers (loop bodies counted once) kept as a cross-check
+      "xla_flops_raw": float(cost.get("flops", 0.0)),
+      "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+  })
+  return row
+
+
+def main(argv=None):
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None)
+  ap.add_argument("--shape", default=None)
+  ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+  ap.add_argument("--all", action="store_true")
+  ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+  ap.add_argument("--remat", default="full")
+  ap.add_argument("--accum", type=int, default=0)
+  ap.add_argument("--no-fsdp", action="store_true")
+  ap.add_argument("--no-seq-shard-decode", action="store_true")
+  ap.add_argument("--no-act-seq-shard", action="store_true")
+  ap.add_argument("--zero2", action="store_true",
+                  help="ZeRO-2: gather compute params once per step")
+  ap.add_argument("--grad-comm-bf16", action="store_true",
+                  help="bf16 gradient reduction (DDP-style compression)")
+  ap.add_argument("--flash-chunk", type=int, default=0)
+  ap.add_argument("--set", action="append", default=[],
+                  help="config override k=v (e.g. --set ssm_chunk=128)")
+  args = ap.parse_args(argv)
+
+  cells = []
+  if args.all:
+    for a, s, _ in configs.cells():
+      cells.append((a, s, args.mesh))
+  else:
+    cells.append((args.arch, args.shape, args.mesh))
+
+  ok = True
+  for arch, shp, mk in cells:
+    try:
+      if args.flash_chunk:
+        from repro.models import attention as _attn
+        _attn.FLASH_CHUNK[0] = args.flash_chunk
+      overrides = {}
+      for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+      row = run_cell(arch, shp, mk, remat=args.remat, accum=args.accum,
+                     fsdp=not args.no_fsdp,
+                     seq_shard_decode=not args.no_seq_shard_decode,
+                     act_seq_shard=not args.no_act_seq_shard,
+                     cfg_overrides=overrides or None, zero2=args.zero2,
+                     grad_comm_bf16=args.grad_comm_bf16)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug; report it
+      row = {"arch": arch, "shape": shp, "mesh": mk, "status": "FAILED",
+             "error": f"{type(e).__name__}: {e}"}
+      ok = False
+    print(json.dumps(row, default=float))
+    sys.stdout.flush()
+    if args.out:
+      os.makedirs(args.out, exist_ok=True)
+      fn = f"{arch}__{shp}__{mk}.json".replace("/", "_")
+      with open(os.path.join(args.out, fn), "w") as f:
+        json.dump(row, f, indent=1, default=float)
+  return 0 if ok else 1
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,148 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every dry-run cell.
+
+``input_specs(cfg, shape, par)`` returns (shapes, shardings) pytrees for the
+step function the cell lowers — weak-type-correct, shardable, and never
+allocating (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import Shape
+from repro.models import common as cm
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+
+Sds = jax.ShapeDtypeStruct
+
+
+def _sds(tree):
+  return jax.tree.map(lambda x: Sds(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# model / optimizer state
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: cm.ModelConfig):
+  return _sds(jax.eval_shape(
+      functools.partial(zoo.init, cfg), jax.random.PRNGKey(0)))
+
+
+def param_specs(cfg: cm.ModelConfig, par: cm.Parallelism):
+  return cm.specs_like(param_shapes(cfg), cfg, par)
+
+
+def train_state_shapes(cfg: cm.ModelConfig):
+  p = param_shapes(cfg)
+  opt = {
+      "m": p,
+      "v": p,
+      "step": Sds((), jnp.int32),
+  }
+  return (p, opt)
+
+
+def train_state_specs(cfg: cm.ModelConfig, par: cm.Parallelism):
+  ps = param_specs(cfg, par)
+  return (ps, {"m": ps, "v": ps, "step": P()})
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: cm.ModelConfig, shape: Shape):
+  b = shape.global_batch
+  s = 1 if shape.kind == "decode" else shape.seq_len
+  out = {"tokens": Sds((b, s), jnp.int32)}
+  if shape.kind == "train":
+    out["labels"] = Sds((b, s), jnp.int32)
+  if cfg.family == "encdec":
+    if shape.kind == "decode":
+      out["enc_out"] = Sds((b, cfg.src_len, cfg.d_model), cfg.dtype)
+    else:
+      out["src_embeds"] = Sds((b, cfg.src_len, cfg.d_model), cfg.dtype)
+  return out
+
+
+def batch_specs(cfg: cm.ModelConfig, shape: Shape, par: cm.Parallelism):
+  dp = par.dp_for(shape.global_batch)
+  out = {"tokens": P(dp, None)}
+  if shape.kind == "train":
+    out["labels"] = P(dp, None)
+  if cfg.family == "encdec":
+    if shape.kind == "decode":
+      out["enc_out"] = P(dp, None, None)
+    else:
+      out["src_embeds"] = P(dp, None, None)
+  return out
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def cache_max_len(cfg: cm.ModelConfig, shape: Shape) -> int:
+  """SWA archs decode long contexts with a window-sized ring buffer."""
+  if cfg.window is not None:
+    return min(shape.seq_len, cfg.window)
+  return shape.seq_len
+
+
+def cache_shapes(cfg: cm.ModelConfig, shape: Shape):
+  return _sds(jax.eval_shape(
+      functools.partial(zoo.init_cache, cfg, shape.global_batch,
+                        cache_max_len(cfg, shape))))
+
+
+def cache_specs(cfg: cm.ModelConfig, par: cm.Parallelism, shape: Shape, *,
+                seq_sharded: Optional[bool] = None):
+  """Specs matching the init_cache pytree.  ``seq_sharded`` (decode default)
+  puts the cache sequence axis on the model axis — sequence-parallel decode;
+  SSM/conv states put their head/channel axis there instead."""
+  dp, tp = par.dp_for(shape.global_batch), par.tp
+  seq_sharded = par.seq_shard_decode if seq_sharded is None else seq_sharded
+  kv_seq = tp if seq_sharded else None
+
+  def walk(prefix, tree):
+    out = {}
+    for k, v in tree.items():
+      if isinstance(v, dict):
+        out[k] = walk(f"{prefix}/{k}", v)
+        continue
+      if k in ("k", "v"):
+        # (L|n_apps, B, S, KV, hd).  When the batch can't shard (B=1
+        # long-context cells) put the idle data axes on the KV-head dim
+        # instead (divisibility permitting) — 2-D cache sharding.
+        kv_heads_dp = None
+        if dp is None and cfg.n_kv_heads % par.dp_size == 0:
+          kv_heads_dp = par.dp
+        out[k] = P(None, dp, kv_seq, kv_heads_dp, None)
+      elif k == "ssm":
+        # (L, B, H, N, Pdim) — heads on the model axis
+        out[k] = P(None, dp, tp, None, None)
+      elif k in ("conv", "bc_conv"):
+        # (L, B, K-1, C) — channels on the model axis (conv is depthwise);
+        # bc channels are small → replicated
+        out[k] = P(None, dp, None, tp if k == "conv" else None)
+      elif k == "len":
+        out[k] = P()
+      else:
+        raise KeyError(f"unknown cache leaf {prefix}/{k}")
+    return out
+
+  shp = jax.eval_shape(functools.partial(zoo.init_cache, cfg, 8, 128))
+  return walk("", shp)
+
+
+def logits_spec(cfg: cm.ModelConfig, par: cm.Parallelism):
+  return P(par.dp, None, par.tp)

@@ -1,0 +1,117 @@
+"""Training driver: config → mesh → sharded train loop with checkpointing,
+fault tolerance, and deterministic resume.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --batch 8 --seq 256 --smoke --ckpt-dir /tmp/run1
+
+On the CPU host this runs the reduced (smoke) configs on a host mesh; on a
+real pod the same driver runs the full config on make_production_mesh().
+Fault tolerance: every --ckpt-every steps the full train state is committed
+atomically; on restart the driver resumes from LATEST and the stateless data
+pipeline replays the exact stream.  A simulated failure mode (--fail-at)
+kills the process mid-run so tests can exercise the restart path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data import DataConfig, make_source
+from repro.launch import mesh as mesh_mod
+from repro.models import common as cm
+from repro.models import zoo
+from repro.train import (AdamWConfig, checkpoint as ckpt, init_opt_state,
+                         make_train_step)
+
+
+def main(argv=None):
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", required=True)
+  ap.add_argument("--smoke", action="store_true")
+  ap.add_argument("--steps", type=int, default=100)
+  ap.add_argument("--batch", type=int, default=8)
+  ap.add_argument("--seq", type=int, default=256)
+  ap.add_argument("--lr", type=float, default=3e-3)
+  ap.add_argument("--accum", type=int, default=1)
+  ap.add_argument("--ckpt-dir", default=None)
+  ap.add_argument("--ckpt-every", type=int, default=50)
+  ap.add_argument("--fail-at", type=int, default=None,
+                  help="simulate a node failure at this step (tests)")
+  ap.add_argument("--corpus", default=None)
+  ap.add_argument("--async-ckpt", action="store_true",
+                  help="commit checkpoints on a background thread")
+  ap.add_argument("--prefetch", type=int, default=2)
+  ap.add_argument("--log-every", type=int, default=10)
+  ap.add_argument("--seed", type=int, default=0)
+  args = ap.parse_args(argv)
+
+  cfg = configs.get_config(args.arch, smoke=args.smoke)
+  oc = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                   total_steps=args.steps)
+  data = make_source(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.batch, seed=args.seed,
+                                corpus_path=args.corpus),
+                     prefetch=args.prefetch)
+
+  n_dev = len(jax.devices())
+  mesh = mesh_mod.make_host_mesh(model=2 if n_dev > 1 else 1)
+  par = cm.Parallelism(data_axes=("data",), tp_size=mesh.shape["model"])
+
+  start = 0
+  params = zoo.init(cfg, jax.random.PRNGKey(args.seed))
+  opt = init_opt_state(params)
+  if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+    restored, start = ckpt.restore(args.ckpt_dir,
+                                   template={"params": params, "opt": opt})
+    params, opt = restored["params"], restored["opt"]
+    print(f"[train] resumed from step {start}")
+
+  specs = cm.specs_like(params, cfg, par)
+  shard = lambda t, s: jax.device_put(
+      t, jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
+                      is_leaf=lambda x: isinstance(x, P)))
+  with mesh:
+    params = shard(params, specs)
+    opt = shard(opt, {"m": specs, "v": specs, "step": P()})
+    step_fn = jax.jit(make_train_step(cfg, oc, accum=args.accum),
+                      donate_argnums=0)
+
+    state = (params, opt)
+    t0 = time.time()
+    for step in range(start, args.steps):
+      if args.fail_at is not None and step == args.fail_at:
+        print(f"[train] simulating node failure at step {step}", flush=True)
+        os._exit(42)
+      batch = data.batch_at(step)
+      state, metrics = step_fn(state, batch)
+      if (step + 1) % args.log_every == 0 or step == start:
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        tok_s = args.batch * args.seq * (step + 1 - start) / max(dt, 1e-9)
+        print(f"[train] step={step + 1} loss={loss:.4f} "
+              f"lr={float(metrics['lr']):.2e} "
+              f"gnorm={float(metrics['grad_norm']):.2f} tok/s={tok_s:,.0f}",
+              flush=True)
+      if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+        payload = {"params": state[0], "opt": state[1]}
+        if args.async_ckpt:
+          if not hasattr(main, "_ac") or main._ac.ckpt_dir != args.ckpt_dir:
+            main._ac = ckpt.AsyncCheckpointer(args.ckpt_dir)
+          main._ac.save(step + 1, payload)
+        else:
+          ckpt.save(args.ckpt_dir, step + 1, payload)
+  if args.ckpt_dir and args.async_ckpt and hasattr(main, "_ac"):
+    main._ac.wait()
+  print("[train] done")
+  return 0
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,5 @@
+"""Model substrate: configs, layers, families, unified zoo API."""
+from repro.models.common import ModelConfig, Parallelism, specs_like
+from repro.models import zoo
+
+__all__ = ["ModelConfig", "Parallelism", "specs_like", "zoo"]

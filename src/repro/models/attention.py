@@ -1,0 +1,314 @@
+"""GQA attention: flash-style chunked XLA path (default), Pallas kernel path
+(TPU), KV cache with decode, sliding-window masking.
+
+Memory/dataflow notes:
+  * The XLA path is an online-softmax scan over KV chunks — identical math to
+    kernels/flash_attention.py but expressed in HLO so the multi-pod dry-run
+    lowers without Mosaic.  Peak live logits are (B, KV, G, Sq, ckv) instead
+    of (B, H, Sq, Skv).
+  * GQA is computed in (KV, G) grouped form — expanded K/V are never
+    materialized.
+  * Decode keeps the whole cache resident; with ``Parallelism.
+    seq_shard_decode`` the cache's sequence axis is sharded over the model
+    axis and XLA turns the softmax/PV reductions into cross-chip collectives
+    (sequence-parallel decode — how a 524 k-token cache fits a pod).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+Array = jax.Array
+_NEG = -1e30
+
+# KV-chunk length for the online-softmax prefill scan (perf knob, §Perf H-D):
+# larger chunks amortize the (m, l, acc) carry read-modify-writes; VMEM on
+# real TPU bounds it at a few k.
+FLASH_CHUNK = [2048]  # §Perf H-E: 2048 beats 1024 by ~4% on prefill bytes
+
+
+def attn_params(key, cfg: cm.ModelConfig, n_layers: Optional[int] = None):
+  """Stacked attention params; leading dim = layers (absent if n_layers None)."""
+  hd, h, kv, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+  ks = cm.split_keys(key, 4)
+  L = (n_layers,) if n_layers else ()
+  p = {
+      "wq": cm.dense_init(ks[0], (*L, d, h, hd), in_axis=-3,
+                          dtype=cfg.param_dtype),
+      "wk": cm.dense_init(ks[1], (*L, d, kv, hd), in_axis=-3,
+                          dtype=cfg.param_dtype),
+      "wv": cm.dense_init(ks[2], (*L, d, kv, hd), in_axis=-3,
+                          dtype=cfg.param_dtype),
+      "wo": cm.dense_init(ks[3], (*L, h, hd, d), in_axis=-2,
+                          dtype=cfg.param_dtype),
+  }
+  if cfg.qkv_bias:
+    p["bq"] = jnp.zeros((*L, h, hd), cfg.param_dtype)
+    p["bk"] = jnp.zeros((*L, kv, hd), cfg.param_dtype)
+    p["bv"] = jnp.zeros((*L, kv, hd), cfg.param_dtype)
+  if cfg.qk_norm:
+    p["q_norm_scale"] = jnp.ones((*L, hd), cfg.param_dtype)
+    p["k_norm_scale"] = jnp.ones((*L, hd), cfg.param_dtype)
+  return p
+
+
+def _project_qkv(p, cfg: cm.ModelConfig, x: Array, positions: Array,
+                 use_rope: bool = True):
+  """x: (B, S, D) → q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+  dt = cfg.dtype
+  q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+  k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+  v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+  if cfg.qkv_bias:
+    q = q + p["bq"].astype(dt)
+    k = k + p["bk"].astype(dt)
+    v = v + p["bv"].astype(dt)
+  if cfg.qk_norm:
+    q = cm.rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
+    k = cm.rms_norm(k, p["k_norm_scale"], cfg.norm_eps)
+  if use_rope:
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+  return q, k, v
+
+
+def _chunk_mask(c_idx, ck, skv, qpos, causal, window):
+  kpos = (c_idx * ck + jnp.arange(ck))[None, :]  # (1, ck)
+  mask = kpos < skv
+  if causal:
+    mask = mask & (kpos <= qpos)
+  if window is not None:
+    mask = mask & (kpos > qpos - window)
+  return mask
+
+
+def _kv_chunks(k, v, chunk):
+  b, skv, kvh, hd = k.shape
+  ck = min(chunk, skv)
+  nck = -(-skv // ck)
+  pad = nck * ck - skv
+  kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+  vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+  ks = kp.reshape(b, nck, ck, kvh, hd).transpose(1, 0, 3, 2, 4)
+  vs = vp.reshape(b, nck, ck, kvh, hd).transpose(1, 0, 3, 2, 4)
+  return ks, vs, ck, nck
+
+
+def _flash_fwd_impl(q, k, v, causal, window, scale, q_offset, chunk):
+  """Online-softmax forward.  Returns (out(B,S,H,hd), lse(B,KV,G,Sq))."""
+  b, sq, h, hd = q.shape
+  skv, kvh = k.shape[1], k.shape[2]
+  g = h // kvh
+  qg = q.reshape(b, sq, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+  qg = qg.astype(jnp.float32) * scale
+  ks, vs, ck, nck = _kv_chunks(k, v, chunk)
+  qpos = (q_offset + jnp.arange(sq))[:, None]
+
+  def step(carry, xs):
+    m, l, acc = carry
+    kc, vc, c_idx = xs
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kc.astype(jnp.float32))
+    mask = _chunk_mask(c_idx, ck, skv, qpos, causal, window)
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    pexp = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + pexp.sum(axis=-1)
+    pv = jnp.einsum("bkgqc,bkcd->bkgqd", pexp, vc.astype(jnp.float32))
+    acc_new = acc * alpha[..., None] + pv
+    return (m_new, l_new, acc_new), None
+
+  m0 = jnp.full((b, kvh, g, sq), _NEG, jnp.float32)
+  l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+  a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+  (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                (ks, vs, jnp.arange(nck)))
+  lsafe = jnp.where(l == 0.0, 1.0, l)
+  out = acc / lsafe[..., None]
+  out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+  lse = m + jnp.log(lsafe)
+  return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_xla(q: Array, k: Array, v: Array, causal: bool,
+               window: Optional[int], scale: float, q_offset: int = 0,
+               chunk: int = 1024) -> Array:
+  """Flash attention with a flash *backward* (custom VJP): the bwd pass
+  recomputes per-chunk probabilities from (q, k, v, out, lse) instead of
+  letting scan-autodiff stack per-chunk f32 probability residuals through
+  HBM — the dominant memory/bytes term of the baseline train cells
+  (EXPERIMENTS.md §Perf, optimization P1)."""
+  out, _ = _flash_fwd_impl(q, k, v, causal, window, scale, q_offset, chunk)
+  return out
+
+
+def _flash_xla_fwd(q, k, v, causal, window, scale, q_offset, chunk):
+  out, lse = _flash_fwd_impl(q, k, v, causal, window, scale, q_offset, chunk)
+  return out, (q, k, v, out, lse)
+
+
+def _flash_xla_bwd(causal, window, scale, q_offset, chunk, res, dout):
+  q, k, v, out, lse = res
+  b, sq, h, hd = q.shape
+  skv, kvh = k.shape[1], k.shape[2]
+  g = h // kvh
+  f32 = jnp.float32
+
+  qg = q.reshape(b, sq, kvh, g, hd).transpose(0, 2, 3, 1, 4).astype(f32)
+  og = out.reshape(b, sq, kvh, g, hd).transpose(0, 2, 3, 1, 4).astype(f32)
+  dg = dout.reshape(b, sq, kvh, g, hd).transpose(0, 2, 3, 1, 4).astype(f32)
+  delta = jnp.sum(og * dg, axis=-1)                    # (B,KV,G,Sq)
+  ks, vs, ck, nck = _kv_chunks(k, v, chunk)
+  qpos = (q_offset + jnp.arange(sq))[:, None]
+
+  def step(dq_acc, xs):
+    kc, vc, c_idx = xs
+    kc = kc.astype(f32)
+    vc = vc.astype(f32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg * scale, kc)
+    mask = _chunk_mask(c_idx, ck, skv, qpos, causal, window)
+    p = jnp.where(mask[None, None, None],
+                  jnp.exp(s - lse[..., None]), 0.0)    # (B,KV,G,Sq,ck)
+    dv_c = jnp.einsum("bkgqc,bkgqd->bkcd", p, dg)
+    dp = jnp.einsum("bkgqd,bkcd->bkgqc", dg, vc)
+    ds = p * (dp - delta[..., None]) * scale           # dL/ds · scale chain
+    dq_acc = dq_acc + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kc)
+    dk_c = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qg)
+    return dq_acc, (dk_c, dv_c)
+
+  dq0 = jnp.zeros((b, kvh, g, sq, hd), f32)
+  dq, (dks, dvs) = jax.lax.scan(step, dq0, (ks, vs, jnp.arange(nck)))
+  dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+  # (nc,B,KV,ck,hd) → (B, Skv_pad, KV, hd) → crop
+  dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, nck * ck, kvh, hd)
+  dv = dvs.transpose(1, 0, 3, 2, 4).reshape(b, nck * ck, kvh, hd)
+  return (dq, dk[:, :skv].astype(k.dtype), dv[:, :skv].astype(v.dtype))
+
+
+_flash_xla.defvjp(_flash_xla_fwd, _flash_xla_bwd)
+
+
+def _full_decode(q: Array, k: Array, v: Array, *, scale: float,
+                 kv_len: Array, window: Optional[int],
+                 chunk: int = 8192) -> Array:
+  """Flash-decode: single-step attention against a (possibly partially
+  filled) cache, online-softmax over cache chunks so dtype conversions and
+  score tensors stay chunk-local (never a full-cache-sized temp).
+
+  q: (B,1,H,hd); k/v: (B,Smax,KV,hd); kv_len: valid prefix length (B,) or ()."""
+  b, _, h, hd = q.shape
+  smax, kvh = k.shape[1], k.shape[2]
+  g = h // kvh
+  f32 = jnp.float32
+  qg = q.reshape(b, kvh, g, hd).astype(f32) * scale
+  kv_len = jnp.asarray(kv_len)
+  if kv_len.ndim == 0:
+    kv_len = jnp.full((b,), kv_len)
+
+  # single fused contraction over the whole cache: SPMD-friendly for any
+  # cache sharding (seq- or kv-head-sharded).  bf16 operands with f32
+  # accumulation; the CPU host backend materializes chunkable f32 converts
+  # (a host-compiler artifact noted in EXPERIMENTS.md — TPU keeps bf16 dots).
+  qb = qg.astype(k.dtype)
+  s = jnp.einsum("bkgd,bskd->bkgs", qb, k,
+                 preferred_element_type=f32)
+  kpos = jnp.arange(smax)[None, :]
+  mask = kpos < kv_len[:, None]
+  if window is not None:
+    mask = mask & (kpos > kv_len[:, None] - 1 - window)
+  s = jnp.where(mask[:, None, None], s, _NEG)
+  p = jax.nn.softmax(s, axis=-1)
+  out = jnp.einsum("bkgs,bskd->bkgd", p.astype(k.dtype), v,
+                   preferred_element_type=f32)
+  return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def init_cache(cfg: cm.ModelConfig, n_layers: int, batch: int, max_len: int,
+               dtype=None):
+  dtype = dtype or cfg.dtype
+  kv, hd = cfg.n_kv_heads, cfg.hd
+  return {
+      "k": jnp.zeros((n_layers, batch, max_len, kv, hd), dtype),
+      "v": jnp.zeros((n_layers, batch, max_len, kv, hd), dtype),
+      "len": jnp.zeros((), jnp.int32),
+  }
+
+
+def attention(p, cfg: cm.ModelConfig, x: Array, positions: Array, *,
+              mode: str = "train",
+              layer_cache=None,
+              cache_len=None,
+              impl: str = "xla",
+              causal: bool = True,
+              kv_override=None) -> tuple[Array, Optional[dict]]:
+  """One attention block.
+
+  mode:
+    'train'   — full-sequence, no cache; returns (out, None)
+    'prefill' — full-sequence; returns (out, {'k','v'}) for cache seeding
+    'decode'  — x is (B, 1, D); layer_cache holds {'k','v'} (B,Smax,KV,hd)
+                and cache_len the filled length; returns (out, updated kv)
+  kv_override: (k, v) for cross-attention (keys from the encoder).
+  """
+  scale = cfg.hd ** -0.5
+  window = cfg.window
+
+  if mode in ("train", "prefill"):
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if kv_override is not None:
+      k, v = kv_override
+      causal = False
+    if impl == "pallas":
+      from repro.kernels import flash_attention as fa
+      out = fa(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+               v.transpose(0, 2, 1, 3), causal=causal, window=window,
+               scale=scale).transpose(0, 2, 1, 3)
+    elif impl == "xla_autodiff":
+      # baseline arm (§Perf P1): scan-autodiff attention backward
+      out, _ = _flash_fwd_impl(q, k, v, causal, window, scale, 0,
+                               FLASH_CHUNK[0])
+    else:
+      out = _flash_xla(q, k, v, causal, window, scale, 0, FLASH_CHUNK[0])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    return y, new_cache
+
+  if mode == "decode":
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k_cache, v_cache = layer_cache["k"], layer_cache["v"]
+    if kv_override is None:
+      smax = k_cache.shape[1]
+      # ring-buffer write: when the cache is sized to the sliding window
+      # (long-context SWA decode), cache_len wraps and the oldest row is
+      # overwritten; for a full-length cache this reduces to plain append.
+      # The write is a masked select rather than dynamic-update-slice: the
+      # sequence axis is sharded over the model axis in sequence-parallel
+      # decode, and a DUS with a traced index on a sharded dim makes GSPMD
+      # materialize unsharded copies (observed: 17× memory blow-up); the
+      # elementwise select shards trivially and aliases the donated buffer.
+      write_idx = cache_len % smax
+      seq_iota = jnp.arange(smax)[None, :, None, None]
+      wmask = seq_iota == write_idx
+      k_cache = jnp.where(wmask, k_new.astype(k_cache.dtype), k_cache)
+      v_cache = jnp.where(wmask, v_new.astype(v_cache.dtype), v_cache)
+      kv_len = jnp.minimum(cache_len + 1, smax)
+      # extra window masking only when the cache is larger than the window
+      eff_window = window if (window is not None and window < smax) else None
+      out = _full_decode(q, k_cache, v_cache, scale=scale,
+                         kv_len=kv_len, window=eff_window)
+      updated = {"k": k_cache, "v": v_cache}
+    else:
+      ko, vo = kv_override
+      out = _full_decode(q, ko, vo, scale=scale, kv_len=ko.shape[1],
+                         window=None)
+      updated = layer_cache
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    return y, updated
+
+  raise ValueError(mode)

@@ -1,0 +1,297 @@
+"""Model substrate shared across all assigned architectures.
+
+Design rules (they matter at 512-chip scale):
+
+  * **Stacked layers + lax.scan** everywhere — HLO size is O(1) in depth, so
+    an 81-layer hybrid compiles as fast as a 22-layer dense model, and
+    FSDP-style parameter gathering happens per scan step (overlapped by XLA).
+  * **Explicit PartitionSpec per parameter** via `param_specs` — TP over the
+    ``model`` axis (attention heads / FFN hidden / vocab), optional ZeRO-3
+    ("fsdp") sharding of the stacked-layer weights over the ``data`` axis.
+  * Pure functional pytrees (dict params), no framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+  name: str
+  family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+  n_layers: int
+  d_model: int
+  n_heads: int
+  n_kv_heads: int
+  d_ff: int
+  vocab: int
+  head_dim: Optional[int] = None
+  # attention
+  window: Optional[int] = None     # sliding-window size (SWA) or None
+  qkv_bias: bool = False
+  qk_norm: bool = False
+  rope_theta: float = 10000.0
+  norm_eps: float = 1e-5
+  tie_embeddings: bool = False
+  # MoE
+  n_experts: int = 0
+  topk: int = 0
+  capacity_factor: float = 1.25
+  # SSM (mamba2 / SSD)
+  ssm_state: int = 0
+  ssm_expand: int = 2
+  ssm_headdim: int = 64
+  ssm_ngroups: int = 1
+  ssm_chunk: int = 256
+  conv_kernel: int = 4
+  # hybrid (zamba2-style): one shared attention block every k SSM blocks
+  hybrid_attn_every: int = 0
+  # encoder-decoder
+  enc_layers: int = 0
+  dec_layers: int = 0
+  cross_attention: bool = False
+  src_len: int = 0                 # modality-frontend stub sequence length
+  # modality stub: frontend emits precomputed embeddings (audio frames /
+  # image patches); `None` = token ids only
+  modality_stub: Optional[str] = None
+  # dtypes
+  dtype: Any = jnp.bfloat16        # activation / compute dtype
+  param_dtype: Any = jnp.float32   # master weights
+
+  @property
+  def hd(self) -> int:
+    return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+  @property
+  def d_inner(self) -> int:        # SSD inner width
+    return self.ssm_expand * self.d_model
+
+  @property
+  def ssm_heads(self) -> int:
+    return self.d_inner // self.ssm_headdim
+
+  def replace(self, **kw) -> "ModelConfig":
+    return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+  """Mesh-axis assignment for shardings (see launch/mesh.py)."""
+  data_axes: tuple = ("data",)     # batch axis(es); ("pod","data") multi-pod
+  model_axis: str = "model"
+  tp_size: int = 16                # size of the model axis (divisibility)
+  dp_size: int = 16                # total size of the data axes
+  fsdp: bool = True                # ZeRO-3: stacked weights sharded over data
+  seq_shard_decode: bool = True    # decode KV cache sharded over model axis
+  remat: str = "none"              # none | full | dots
+
+  @property
+  def dp(self):                    # spec entry for the batch dimension
+    return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+  def dp_for(self, batch_size: int):
+    """dp spec entry, or None when the batch can't shard evenly (e.g. the
+    global_batch=1 long-context cells — batch stays replicated, the model
+    axis still shards the long dimension)."""
+    return self.dp if batch_size % self.dp_size == 0 else None
+
+  @property
+  def fsdp_axis(self):
+    return self.dp if self.fsdp else None
+
+  @property
+  def tp(self):
+    return self.model_axis
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding constraint (Megatron-style sequence parallelism):
+# the launcher installs a PartitionSpec for the residual stream; every block
+# body calls constrain_acts so the stream stays (data, seq→model, None)
+# sharded between TP regions.  No-op when unset (tests, single device).
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC: list = [None]
+
+
+class activation_sharding:
+  """Context manager: with activation_sharding(P('data','model',None)): ..."""
+
+  def __init__(self, spec):
+    self.spec = spec
+
+  def __enter__(self):
+    self._prev = _ACT_SPEC[0]
+    _ACT_SPEC[0] = self.spec
+    return self
+
+  def __exit__(self, *a):
+    _ACT_SPEC[0] = self._prev
+    return False
+
+
+def constrain_acts(x: Array) -> Array:
+  spec = _ACT_SPEC[0]
+  if spec is None or x.ndim != 3:
+    return x
+  return jax.lax.with_sharding_constraint(x, spec)
+
+
+def act_axes():
+  """(dp, tp) axis names of the installed activation spec (None when unset).
+  Lets inner blocks (MoE dispatch) pin their intermediates to the batch/model
+  axes — GSPMD drops batch sharding through vmapped scatters otherwise."""
+  spec = _ACT_SPEC[0]
+  if spec is None:
+    return None, None
+  dp = spec[0] if len(spec) > 0 else None
+  tp = spec[1] if len(spec) > 1 else None
+  return dp, tp
+
+
+def constrain(x: Array, spec) -> Array:
+  if _ACT_SPEC[0] is None:
+    return x
+  return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+  dt = x.dtype
+  x = x.astype(jnp.float32)
+  x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+  return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+  dt = x.dtype
+  x = x.astype(jnp.float32)
+  mu = jnp.mean(x, axis=-1, keepdims=True)
+  var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+  x = (x - mu) * jax.lax.rsqrt(var + eps)
+  return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+  """x: (B, S, H, D) with D even; positions: (B, S) or (S,)."""
+  d = x.shape[-1]
+  d2 = d // 2
+  freqs = 1.0 / (theta ** (np.arange(0, d2, dtype=np.float32) / d2))
+  if positions.ndim == 1:
+    positions = positions[None, :]
+  ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d2)
+  cos = jnp.cos(ang)[:, :, None, :]
+  sin = jnp.sin(ang)[:, :, None, :]
+  x1, x2 = x[..., :d2].astype(jnp.float32), x[..., d2:].astype(jnp.float32)
+  out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+  return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32) -> Array:
+  fan_in = shape[in_axis]
+  return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def split_keys(key, n):
+  return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec construction
+# ---------------------------------------------------------------------------
+
+
+def spec_for(path: str, shape: Sequence[int], cfg: ModelConfig,
+             par: Parallelism) -> P:
+  """PartitionSpec for one parameter, keyed by its tree path.
+
+  Conventions (leading dim is the stacked layer dim for scanned blocks):
+    embeddings (V, D)            → (tp, None)            vocab-sharded
+    *_norm  (..., D)             → replicated
+    attn q/o projections         → TP on the head dim, fsdp on d_model
+    attn k/v                     → TP on the kv-head dim iff divisible
+    mlp w1/w3 (L, D, F)          → (None, fsdp, tp)
+    mlp w2 (L, F, D)             → (None, tp, fsdp)
+    moe experts (L, E, D, F)     → TP on F (expert width), fsdp on D
+    ssd in/out projections       → TP on the inner dim
+  """
+  tp, fs = par.tp, par.fsdp_axis
+  nd = len(shape)
+
+  if "embed" in path or path.endswith("lm_head"):
+    return P(tp, None) if nd == 2 else P(None)
+  if "norm" in path or path.endswith(("scale", "bias", "dt_bias", "A_log",
+                                      "D")):
+    return P(*([None] * nd))
+  if any(s in path for s in ("wq", "wo")):
+    # stacked (L, D, H, hd) / (L, H, hd, D); shared (D, H, hd) / (H, hd, D)
+    if nd == 4:
+      return P(None, fs, tp, None) if "wq" in path else P(None, tp, None, fs)
+    if nd == 3:
+      return P(fs, tp, None) if "wq" in path else P(tp, None, fs)
+    return P(fs, tp) if "wq" in path else P(tp, fs)
+  if any(s in path for s in ("wk", "wv")):
+    # Megatron GQA rule: TP-shard kv heads only when divisible, else
+    # replicate the (small) kv projections across the model axis.
+    kv_tp = tp if cfg.n_kv_heads % max(par.tp_size, 1) == 0 else None
+    if nd == 4:
+      return P(None, fs, kv_tp, None)
+    if nd == 3:
+      return P(fs, kv_tp, None)
+    return P(fs, kv_tp)
+  if "experts" in path:
+    # (L, E, D, F) or (L, E, F, D)
+    if path.endswith("w2"):
+      return P(None, None, tp, fs)
+    return P(None, None, fs, tp)
+  if "router" in path:
+    return P(None, fs, None)
+  if any(s in path for s in ("w1", "w3", "in_proj", "up")):
+    return P(*([None] * (nd - 2)), fs, tp)
+  if any(s in path for s in ("w2", "out_proj", "down")):
+    return P(*([None] * (nd - 2)), tp, fs)
+  if "conv" in path:
+    return P(*([None] * (nd - 1)), tp)
+  return P(*([None] * nd))
+
+
+def tree_paths(tree, prefix=""):
+  out = {}
+  for k, v in tree.items():
+    p = f"{prefix}/{k}" if prefix else k
+    if isinstance(v, dict):
+      out.update(tree_paths(v, p))
+    else:
+      out[p] = v
+  return out
+
+
+def specs_like(params, cfg: ModelConfig, par: Parallelism):
+  """Pytree of PartitionSpec matching ``params``."""
+  def walk(tree, prefix=""):
+    out = {}
+    for k, v in tree.items():
+      p = f"{prefix}/{k}" if prefix else k
+      if isinstance(v, dict):
+        out[k] = walk(v, p)
+      else:
+        out[k] = spec_for(p, v.shape, cfg, par)
+    return out
+  return walk(params)

@@ -1,0 +1,144 @@
+"""Encoder-decoder backbone (seamless-m4t text/audio) — scan-over-layers.
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_src, D); the encoder is non-causal
+self-attention + GELU MLP, the decoder adds causal self-attention and
+per-layer cross-attention over the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models.transformer import padded_vocab
+
+Array = jax.Array
+
+
+def init_encdec_params(key, cfg: cm.ModelConfig):
+  ks = cm.split_keys(key, 8)
+  le, ld = cfg.enc_layers, cfg.dec_layers
+  vp = padded_vocab(cfg)
+  return {
+      "embed": (jax.random.normal(ks[0], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+      "enc": {
+          "ln1_norm_scale": jnp.ones((le, cfg.d_model), cfg.param_dtype),
+          "ln2_norm_scale": jnp.ones((le, cfg.d_model), cfg.param_dtype),
+          "attn": attn_mod.attn_params(ks[1], cfg, le),
+          "mlp": mlp_mod.mlp_params(ks[2], cfg, le, gated=False),
+      },
+      "enc_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+      "dec": {
+          "ln1_norm_scale": jnp.ones((ld, cfg.d_model), cfg.param_dtype),
+          "ln2_norm_scale": jnp.ones((ld, cfg.d_model), cfg.param_dtype),
+          "ln3_norm_scale": jnp.ones((ld, cfg.d_model), cfg.param_dtype),
+          "attn": attn_mod.attn_params(ks[3], cfg, ld),
+          "cross": attn_mod.attn_params(ks[4], cfg, ld),
+          "mlp": mlp_mod.mlp_params(ks[5], cfg, ld, gated=False),
+      },
+      "final_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+      "lm_head": (jax.random.normal(ks[6], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+  }
+
+
+def encode(p, cfg: cm.ModelConfig, src_embeds: Array,
+           remat: str = "none") -> Array:
+  """src_embeds: (B, S_src, D) from the modality stub."""
+  x = src_embeds.astype(cfg.dtype)
+  b, s = x.shape[:2]
+  positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+  def body(x, lp):
+    h = cm.rms_norm(x, lp["ln1_norm_scale"], cfg.norm_eps)
+    a, _ = attn_mod.attention(lp["attn"], cfg, h, positions, mode="train",
+                              causal=False)
+    x = x + a
+    h = cm.rms_norm(x, lp["ln2_norm_scale"], cfg.norm_eps)
+    return x + mlp_mod.mlp(lp["mlp"], cfg, h), None
+
+  if remat == "full":
+    body = jax.checkpoint(body)
+  x, _ = jax.lax.scan(body, x, p["enc"])
+  return cm.rms_norm(x, p["enc_norm_scale"], cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg: cm.ModelConfig, enc_out: Array):
+  """Per-layer projected encoder K/V (no RoPE on cross-attention)."""
+  dt = cfg.dtype
+  k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["wk"].astype(dt))
+  v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["wv"].astype(dt))
+  return k, v
+
+
+def decode_stack(p, cfg: cm.ModelConfig, tokens: Array, enc_out: Array, *,
+                 mode: str = "train", cache=None, impl: str = "xla",
+                 remat: str = "none"):
+  x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.dtype)
+  b, s = x.shape[:2]
+  cache_len = cache["len"] if cache is not None else None
+  base = cache_len if mode == "decode" else 0
+  positions = base + jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+
+  # Cross-attention K/V for ALL layers, projected once outside the scan
+  # (§Perf: inside the rematerialized body they were recomputed fwd+bwd+remat
+  # per microbatch — the dominant memory-traffic term of the seamless train
+  # cell).  Scanned in as xs; remat does not recompute xs.
+  dt = cfg.dtype
+  ck_all = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                      p["dec"]["cross"]["wk"].astype(dt))
+  cv_all = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                      p["dec"]["cross"]["wv"].astype(dt))
+
+  def body(x, xs):
+    lp, layer_cache, ck, cv = xs
+    x = cm.constrain_acts(x)
+    h = cm.rms_norm(x, lp["ln1_norm_scale"], cfg.norm_eps)
+    a, kv = attn_mod.attention(lp["attn"], cfg, h, positions, mode=mode,
+                               layer_cache=layer_cache, cache_len=cache_len,
+                               impl=impl)
+    x = x + a
+    h = cm.rms_norm(x, lp["ln2_norm_scale"], cfg.norm_eps)
+    ca, _ = attn_mod.attention(lp["cross"], cfg, h, positions, mode=mode,
+                               layer_cache=layer_cache, cache_len=cache_len,
+                               impl=impl, kv_override=(ck, cv))
+    x = x + ca
+    h = cm.rms_norm(x, lp["ln3_norm_scale"], cfg.norm_eps)
+    return x + mlp_mod.mlp(lp["mlp"], cfg, h), kv
+
+  if remat == "full":
+    body = jax.checkpoint(body)
+
+  layer_caches = ({"k": cache["k"], "v": cache["v"]}
+                  if cache is not None else None)
+  x, kvs = jax.lax.scan(body, x, (p["dec"], layer_caches, ck_all, cv_all))
+  if mode == "prefill":
+    x = x[:, -1:]
+  x = cm.rms_norm(x, p["final_norm_scale"], cfg.norm_eps)
+  logits = jnp.einsum("bsd,vd->bsv", x, p["lm_head"].astype(cfg.dtype))
+
+  new_cache = None
+  if mode == "prefill":
+    new_cache = {"k": kvs["k"], "v": kvs["v"],
+                 "len": jnp.asarray(s, jnp.int32)}
+  elif mode == "decode":
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "len": cache_len + 1}
+  return logits, new_cache
+
+
+def forward_encdec(p, cfg: cm.ModelConfig, src_embeds: Array, tokens: Array,
+                   *, mode: str = "train", cache=None, enc_out=None,
+                   impl: str = "xla", remat: str = "none"):
+  """Returns (logits, new_cache, aux).  For decode, pass precomputed
+  ``enc_out`` (the serving loop encodes once)."""
+  if enc_out is None:
+    enc_out = encode(p, cfg, src_embeds, remat=remat)
+  logits, new_cache = decode_stack(p, cfg, tokens, enc_out, mode=mode,
+                                   cache=cache, impl=impl, remat=remat)
+  return logits, new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,179 @@
+"""Zamba2-style hybrid: a stack of Mamba2 (SSD) blocks with one *shared*
+attention+MLP block applied every ``hybrid_attn_every`` SSM blocks
+(arXiv:2411.15242 — the shared block amortizes attention params over depth).
+
+Scan layout: the L SSM blocks are split into ⌈L/k⌉ segments; each segment is
+an inner scan over its stacked params, followed by the shared block (whose
+params are closed over — one copy, every application).  HLO stays O(1) in
+depth; the remainder segment (L mod k) is scanned separately.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import logits_from, padded_vocab
+
+Array = jax.Array
+
+
+def init_hybrid_params(key, cfg: cm.ModelConfig):
+  ks = cm.split_keys(key, 8)
+  L = cfg.n_layers
+  vp = padded_vocab(cfg)
+  return {
+      "embed": (jax.random.normal(ks[0], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+      "final_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+      "blocks": {
+          "ln_norm_scale": jnp.ones((L, cfg.d_model), cfg.param_dtype),
+          "ssm": ssm_mod.ssm_params(ks[1], cfg, L),
+      },
+      "shared": {
+          "ln1_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+          "ln2_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+          "attn": attn_mod.attn_params(ks[2], cfg, None),
+          "mlp": mlp_mod.mlp_params(ks[3], cfg, None),
+      },
+      "lm_head": (jax.random.normal(ks[4], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+  }
+
+
+def _shared_block(sp, cfg, x, positions, *, mode, layer_cache, cache_len,
+                  impl):
+  """The shared attention block; its KV cache is per-application (stacked on
+  a leading 'application' axis in the cache pytree, scanned with the group)."""
+  h = cm.rms_norm(x, sp["ln1_norm_scale"], cfg.norm_eps)
+  a, kv = attn_mod.attention(sp["attn"], cfg, h, positions, mode=mode,
+                             layer_cache=layer_cache, cache_len=cache_len,
+                             impl=impl)
+  x = x + a
+  h = cm.rms_norm(x, sp["ln2_norm_scale"], cfg.norm_eps)
+  return x + mlp_mod.mlp(sp["mlp"], cfg, h), kv
+
+
+def forward_hybrid(p, cfg: cm.ModelConfig, tokens: Array,
+                   positions: Optional[Array] = None, *, mode: str = "train",
+                   cache=None, impl: str = "xla", remat: str = "none"):
+  """cache (prefill/decode): {'ssm': stacked ssm states (L,…),
+  'attn': {'k','v': (n_apps, B, Smax, KV, hd)}, 'len': ()}.
+
+  Returns (logits, new_cache_or_None, aux(=0))."""
+  x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.dtype)
+  b, s = x.shape[:2]
+  every = cfg.hybrid_attn_every or cfg.n_layers + 1
+  L = cfg.n_layers
+  n_apps = L // every
+  cache_len = cache["len"] if cache is not None else None
+  if positions is None:
+    base = cache_len if mode == "decode" else 0
+    positions = base + jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+
+  ssm_state = cache["ssm"] if cache is not None else None
+  main = n_apps * every
+
+  def ssm_body(carry, xs):
+    x = carry
+    lp, st = xs
+    x = cm.constrain_acts(x)
+    h = cm.rms_norm(x, lp["ln_norm_scale"], cfg.norm_eps)
+    y, new_st = ssm_mod.ssm_block(lp["ssm"], cfg, h, mode=mode, state=st)
+    return x + y, new_st
+
+  # --- main body: ONE scan over ⌈L/k⌉ groups, each = inner scan over k SSM
+  # blocks + the shared attention block.  Scanning the shared block (params
+  # closed over) makes XLA accumulate its gradient in a single carried
+  # buffer instead of materializing one full fp32 partial per application
+  # (13× memory on zamba2 otherwise), and keeps HLO size O(1) in n_apps.
+  def regroup(t):
+    return t[:main].reshape(n_apps, every, *t.shape[1:])
+
+  blocks_main = jax.tree.map(regroup, p["blocks"])
+  blocks_tail = jax.tree.map(lambda t: t[main:], p["blocks"])
+  st_main = (jax.tree.map(regroup, ssm_state)
+             if ssm_state is not None else None)
+  st_tail = (jax.tree.map(lambda t: t[main:], ssm_state)
+             if ssm_state is not None else None)
+  attn_cache = cache["attn"] if cache is not None else None
+
+  def group_body(x, xs):
+    grp, grp_state, app_cache = xs
+    x, new_st = jax.lax.scan(ssm_body, x, (grp, grp_state))
+    x, kv = _shared_block(p["shared"], cfg, x, positions, mode=mode,
+                          layer_cache=app_cache, cache_len=cache_len,
+                          impl=impl)
+    return x, (new_st, kv)
+
+  if remat == "full":
+    group_body = jax.checkpoint(group_body)
+    ssm_tail_body = jax.checkpoint(ssm_body)
+  else:
+    ssm_tail_body = ssm_body
+
+  if mode == "decode" and attn_cache is not None:
+    # decode: python loop + static-index in-place cache writes — the scanned
+    # form would carry the whole attention cache through ys and double its
+    # footprint (input xs + fresh output buffer live simultaneously).
+    main_states_l, new_attn = [], attn_cache
+    for app in range(n_apps):
+      grp = jax.tree.map(lambda t, a=app: t[a], blocks_main)
+      st = jax.tree.map(lambda t, a=app: t[a], st_main)
+      x, new_st = jax.lax.scan(ssm_body, x, (grp, st))
+      lc = {"k": new_attn["k"][app], "v": new_attn["v"][app]}
+      x, kv = _shared_block(p["shared"], cfg, x, positions, mode=mode,
+                            layer_cache=lc, cache_len=cache_len, impl=impl)
+      new_attn = {
+          "k": new_attn["k"].at[app].set(kv["k"].astype(new_attn["k"].dtype)),
+          "v": new_attn["v"].at[app].set(kv["v"].astype(new_attn["v"].dtype)),
+      }
+      main_states_l.append(jax.tree.map(lambda t: t[None], new_st))
+    main_states = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                               *main_states_l)
+    attn_kvs = new_attn
+  else:
+    x, (main_states, attn_kvs) = jax.lax.scan(
+        group_body, x, (blocks_main, st_main, attn_cache))
+  tail_states = None
+  if main < L:
+    x, tail_states = jax.lax.scan(ssm_tail_body, x,
+                                  (blocks_tail, st_tail))
+
+  if mode == "prefill":
+    x = x[:, -1:]
+  x = cm.rms_norm(x, p["final_norm_scale"], cfg.norm_eps)
+  logits = logits_from(p, cfg, x)
+
+  new_cache = None
+  if mode in ("prefill", "decode"):
+    def degroup(t):
+      return t.reshape(n_apps * every, *t.shape[2:])
+    ssm_new = jax.tree.map(degroup, main_states)
+    if tail_states is not None:
+      ssm_new = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                             ssm_new, tail_states)
+    new_len = (jnp.asarray(s, jnp.int32) if mode == "prefill"
+               else cache_len + 1)
+    new_cache = {"ssm": ssm_new, "attn": attn_kvs, "len": new_len}
+  return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_hybrid_cache(cfg: cm.ModelConfig, batch: int, max_len: int):
+  every = cfg.hybrid_attn_every or cfg.n_layers + 1
+  n_apps = cfg.n_layers // every
+  ssm = ssm_mod.init_ssm_state(cfg, cfg.n_layers, batch)
+  kv, hd = cfg.n_kv_heads, cfg.hd
+  return {
+      "ssm": ssm,
+      "attn": {
+          "k": jnp.zeros((n_apps, batch, max_len, kv, hd), cfg.dtype),
+          "v": jnp.zeros((n_apps, batch, max_len, kv, hd), cfg.dtype),
+      },
+      "len": jnp.zeros((), jnp.int32),
+  }

@@ -1,0 +1,35 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (enc-dec)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+Array = jax.Array
+
+
+def mlp_params(key, cfg: cm.ModelConfig, n_layers: Optional[int] = None,
+               gated: bool = True, d_ff: Optional[int] = None):
+  d, f = cfg.d_model, d_ff or cfg.d_ff
+  L = (n_layers,) if n_layers else ()
+  ks = cm.split_keys(key, 3)
+  p = {
+      "w1": cm.dense_init(ks[0], (*L, d, f), dtype=cfg.param_dtype),
+      "w2": cm.dense_init(ks[1], (*L, f, d), dtype=cfg.param_dtype),
+  }
+  if gated:
+    p["w3"] = cm.dense_init(ks[2], (*L, d, f), dtype=cfg.param_dtype)
+  return p
+
+
+def mlp(p, cfg: cm.ModelConfig, x: Array) -> Array:
+  dt = cfg.dtype
+  h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt))
+  if "w3" in p:
+    h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(dt))
+  else:
+    h = jax.nn.gelu(h)
+  return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt))

@@ -1,0 +1,115 @@
+"""Top-k routed mixture-of-experts with capacity-bounded scatter dispatch.
+
+Parallelism design (DESIGN.md §3): with 8–16 experts and a 16-wide model
+axis, pure expert-parallelism is impossible (E < TP) — instead experts are
+**TP-sharded on their hidden width** (each expert's FFN is split over the
+model axis) and tokens stay on their data shard (no all-to-all).  Dispatch is
+a per-row scatter into an (E, C) capacity buffer (vmapped over batch), so the
+(T, E, C) one-hot dispatch tensor of the mesh-tf formulation is never
+materialized; combine is the matching gather weighted by router gates.
+
+Capacity per batch row: C = ceil(topk · S · capacity_factor / E); overflow
+tokens are dropped (standard switch behaviour) and the router aux loss
+(load-balance, Switch-style) is returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+Array = jax.Array
+
+
+def moe_params(key, cfg: cm.ModelConfig, n_layers: Optional[int] = None):
+  d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+  L = (n_layers,) if n_layers else ()
+  ks = cm.split_keys(key, 4)
+  return {
+      "router": cm.dense_init(ks[0], (*L, d, e), dtype=cfg.param_dtype),
+      "experts": {
+          "w1": cm.dense_init(ks[1], (*L, e, d, f), dtype=cfg.param_dtype),
+          "w3": cm.dense_init(ks[2], (*L, e, d, f), dtype=cfg.param_dtype),
+          "w2": cm.dense_init(ks[3], (*L, e, f, d), in_axis=-2,
+                              dtype=cfg.param_dtype),
+      },
+  }
+
+
+def capacity(cfg: cm.ModelConfig, seq: int) -> int:
+  c = math.ceil(cfg.topk * seq * cfg.capacity_factor / cfg.n_experts)
+  return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _route(router_w: Array, cfg: cm.ModelConfig, x: Array):
+  """x: (B,S,D) → gates (B,S,k), expert ids (B,S,k), aux loss (scalar)."""
+  logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                      router_w.astype(jnp.float32))
+  probs = jax.nn.softmax(logits, axis=-1)
+  gate, idx = jax.lax.top_k(probs, cfg.topk)          # (B,S,k)
+  gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+  # Switch aux loss: E · Σ_e fraction_tokens(e) · mean_prob(e)
+  e = cfg.n_experts
+  onehot = jax.nn.one_hot(idx[..., 0], e)             # top-1 fraction proxy
+  frac = onehot.mean(axis=(0, 1))
+  mean_p = probs.mean(axis=(0, 1))
+  aux = e * jnp.sum(frac * mean_p)
+  return gate.astype(x.dtype), idx, aux
+
+
+def _dispatch_row(x_row: Array, idx_row: Array, gate_row: Array, e: int,
+                  cap: int):
+  """One batch row: scatter tokens into per-expert capacity slots.
+
+  x_row: (S, D); idx/gate_row: (S, k).  Returns
+  (buf (E, C, D), slot_e (S,k), slot_p (S,k), keep (S,k))."""
+  s, k = idx_row.shape
+  flat_e = idx_row.reshape(-1)                               # (S·k,)
+  # position of each (token, choice) within its expert queue
+  onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (S·k, E)
+  pos = jnp.cumsum(onehot, axis=0) - 1                       # arrival order
+  flat_p = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+  keep = flat_p < cap
+  safe_p = jnp.where(keep, flat_p, 0)
+  buf = jnp.zeros((e, cap, x_row.shape[-1]), x_row.dtype)
+  contrib = jnp.where(keep[:, None], 1.0, 0.0).astype(x_row.dtype)
+  tokens = jnp.repeat(x_row, k, axis=0) * contrib            # (S·k, D)
+  buf = buf.at[flat_e, safe_p].add(tokens, mode="drop")
+  return buf, flat_e.reshape(s, k), safe_p.reshape(s, k), keep.reshape(s, k)
+
+
+def moe_block(p, cfg: cm.ModelConfig, x: Array):
+  """x: (B,S,D) → (y, aux_loss)."""
+  from jax.sharding import PartitionSpec as P
+  b, s, d = x.shape
+  e, cap = cfg.n_experts, capacity(cfg, s)
+  gate, idx, aux = _route(p["router"], cfg, x)
+
+  buf, slot_e, slot_p, keep = jax.vmap(
+      lambda xr, ir, gr: _dispatch_row(xr, ir, gr, e, cap))(x, idx, gate)
+  # buf: (B, E, C, D) — expert FFN, TP-sharded on F via the experts specs.
+  # Pin batch/model shardings explicitly: GSPMD loses the batch sharding
+  # through the vmapped scatter and would otherwise materialize global-batch
+  # capacity buffers on every device (observed 53 GiB/dev on mixtral train).
+  dp, tp = cm.act_axes()
+  buf = cm.constrain(buf, P(dp, None, None, None))
+  dt = cfg.dtype
+  w = p["experts"]
+  h = jnp.einsum("becd,edf->becf", buf, w["w1"].astype(dt))
+  h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, w["w3"].astype(dt))
+  h = cm.constrain(h, P(dp, None, None, tp))
+  out = jnp.einsum("becf,efd->becd", h, w["w2"].astype(dt))  # (B,E,C,D)
+  out = cm.constrain(out, P(dp, None, None, None))
+
+  # combine: gather each (token, choice) slot back, weight by gate
+  def gather_row(out_row, se, sp, kp, gr):
+    tok = out_row[se, sp]                                    # (S,k,D)
+    return jnp.sum(tok * (gr * kp)[..., None], axis=1)
+
+  y = jax.vmap(gather_row)(out, slot_e, slot_p,
+                           keep.astype(dt), gate.astype(dt))
+  return y, aux

@@ -1,0 +1,216 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+SIMD² tie-in (DESIGN.md §4): the SSD chunked algorithm *is* a masked
+semiring-like contraction — the intra-chunk term is a (+, ×) matrix
+contraction ``Y = (L ∘ C Bᵀ) X`` with a decay mask L built from a (+)-ring
+cumulative scan (``segsum``), and the inter-chunk recurrence is an
+associative ⊕-scan over chunk states.  It runs on the same MXU dataflow the
+paper generalizes, which is why mamba2/zamba2 are the "technique applies
+structurally" architectures in the applicability matrix.
+
+Layout: x (B,S,D) → z,xin (d_inner), B,C (G·N), dt (H) → depthwise causal
+conv on (xin|B|C) → SSD(chunks) → gated RMSNorm → out_proj.  Heads are
+TP-sharded (d_inner over the model axis); B/C/dt are small and replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+Array = jax.Array
+
+
+def ssm_params(key, cfg: cm.ModelConfig, n_layers: Optional[int] = None):
+  d, din = cfg.d_model, cfg.d_inner
+  g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+  k = cfg.conv_kernel
+  L = (n_layers,) if n_layers else ()
+  ks = cm.split_keys(key, 8)
+  return {
+      "in_proj_z": cm.dense_init(ks[0], (*L, d, din), dtype=cfg.param_dtype),
+      "in_proj_x": cm.dense_init(ks[1], (*L, d, din), dtype=cfg.param_dtype),
+      "bc_proj": cm.dense_init(ks[2], (*L, d, 2 * g * n),
+                               dtype=cfg.param_dtype),
+      "dt_proj": cm.dense_init(ks[3], (*L, d, h), dtype=cfg.param_dtype),
+      "conv_w": (jax.random.normal(ks[4], (*L, k, din)) * 0.1).astype(
+          cfg.param_dtype),
+      "bc_filter_w": (jax.random.normal(ks[5], (*L, k, 2 * g * n)) *
+                      0.1).astype(cfg.param_dtype),
+      "A_log": jnp.zeros((*L, h), cfg.param_dtype),       # A = −exp(A_log)
+      "ssd_skip_D": jnp.ones((*L, h), cfg.param_dtype),
+      "dt_bias": jnp.full((*L, h), -4.6, cfg.param_dtype),  # softplus ≈ 0.01
+      "ssd_norm_scale": jnp.ones((*L, din), cfg.param_dtype),
+      "out_proj": cm.dense_init(ks[6], (*L, din, d), dtype=cfg.param_dtype),
+  }
+
+
+def _causal_conv(x: Array, w: Array, state: Optional[Array] = None):
+  """Depthwise causal conv.  x: (B,S,C); w: (K,C).  Returns (y, new_state)
+  where state carries the last K−1 inputs for decode."""
+  k = w.shape[0]
+  if state is None:
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+  else:
+    pad = state.astype(x.dtype)
+  xp = jnp.concatenate([pad, x], axis=1)
+  y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+          for i in range(k))
+  new_state = xp[:, -(k - 1):, :] if k > 1 else None
+  return y, new_state
+
+
+def _segsum(x: Array) -> Array:
+  """Within-chunk segment-sum: out[..., i, j] = Σ_{t∈(j, i]} x[..., t]
+  (−inf above the diagonal) — the (+)-ring cumulative scan behind the decay
+  mask L = exp(segsum)."""
+  q = x.shape[-1]
+  cs = jnp.cumsum(x, axis=-1)
+  diff = cs[..., :, None] - cs[..., None, :]          # (…, i, j) = cs_i−cs_j
+  mask = jnp.tril(jnp.ones((q, q), bool), 0)
+  return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh: Array, dt: Array, a: Array, b: Array, c: Array,
+                chunk: int, init_state: Optional[Array] = None):
+  """SSD scan. xh: (B,S,H,P); dt: (B,S,H); a: (H,) negative;
+  b, c: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+  bsz, s, h, p = xh.shape
+  g, n = b.shape[2], b.shape[3]
+  hg = h // g
+  q = min(chunk, s)
+  s_real = s
+  if s % q:
+    # pad the tail: dt=0 ⇒ decay exp(0)=1 and contribution dt·B·x=0, so the
+    # final state and all real rows are unaffected (tail rows are cropped).
+    pad = q * (-(-s // q)) - s
+    xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s + pad
+  nc = s // q
+
+  f32 = jnp.float32
+  xh = xh.astype(f32)
+  dt = dt.astype(f32)
+  dA = dt * a.astype(f32)[None, None, :]              # (B,S,H) ≤ 0
+  # NOTE(§Perf H-C): explicitly pinning dA/dt to the model axis on heads was
+  # tried and REFUTED — GSPMD already propagates head sharding from xh into
+  # the decay chain, and the extra boundary reshard cost +5% memory /+40%
+  # collective traffic on mamba2 train_4k.  Left unpinned.
+
+  def r(t, shape):  # (B,S,…) → (B,nc,Q,…)
+    return t.reshape(bsz, nc, q, *shape)
+
+  xc = r(xh, (h, p))
+  dtc = r(dt, (h,))
+  dac = r(dA, (h,))
+  bc = r(b.astype(f32), (g, n))
+  cc = r(c.astype(f32), (g, n))
+
+  # decay structures
+  seg = _segsum(dac.transpose(0, 1, 3, 2))            # (B,nc,H,Q,Q)
+  L = jnp.exp(seg)
+  cum = jnp.cumsum(dac, axis=2)                        # (B,nc,Q,H)
+  total = cum[:, :, -1]                                # (B,nc,H)
+
+  # intra-chunk: Y_d[i] = Σ_j (C_i·B_j) L[i,j] dt_j x_j
+  scores = jnp.einsum("bzqgn,bzkgn->bzgqk", cc, bc)    # (B,nc,G,Q,Q)
+  scores = jnp.repeat(scores, hg, axis=2) * L          # (B,nc,H,Q,Q)
+  y_diag = jnp.einsum("bzhqk,bzkh,bzkhp->bzqhp", scores, dtc, xc)
+
+  # chunk states: S_z = Σ_j exp(total − cum_j) dt_j B_j ⊗ x_j
+  decay_state = jnp.exp(total[:, :, None, :] - cum)    # (B,nc,Q,H)
+  b_heads = jnp.repeat(bc, hg, axis=3)                 # group → heads
+  states = jnp.einsum("bzqh,bzqh,bzqhn,bzqhp->bzhnp",
+                      decay_state, dtc, b_heads, xc)
+
+  # inter-chunk recurrence: state_{z+1} = exp(total_z)·state_z + S_z
+  chunk_decay = jnp.exp(total)                         # (B,nc,H)
+
+  def scan_fn(carry, xs):
+    st_prev = carry
+    s_z, dec = xs
+    st = st_prev * dec[..., None, None] + s_z
+    return st, st_prev
+
+  s0 = jnp.zeros((bsz, h, n, p), f32) if init_state is None else (
+      init_state.astype(f32))
+  xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+  final, prevs = jax.lax.scan(scan_fn, s0, xs)
+  prev_states = prevs.transpose(1, 0, 2, 3, 4)         # (B,nc,H,N,P)
+
+  # inter-chunk output: Y_off[i] = (C_i · state_prev) exp(cum_i)
+  c_heads = jnp.repeat(cc, hg, axis=3)
+  y_off = jnp.einsum("bzqhn,bzhnp,bzqh->bzqhp", c_heads, prev_states,
+                     jnp.exp(cum))
+  y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_real]
+  return y, final
+
+
+def ssm_block(p, cfg: cm.ModelConfig, x: Array, *, mode: str = "train",
+              state=None):
+  """One mamba2 block.  state (decode): {'ssm': (B,H,N,P), 'conv': (B,K-1,C),
+  'bc_conv': (B,K-1,2GN)}.  Returns (y, new_state|None)."""
+  dt_ = cfg.dtype
+  bsz, s, _ = x.shape
+  g, n, h, pdim = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+
+  z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"].astype(dt_))
+  xin = jnp.einsum("bsd,de->bse", x, p["in_proj_x"].astype(dt_))
+  bcat = jnp.einsum("bsd,de->bse", x, p["bc_proj"].astype(dt_))
+  dt = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(dt_))
+
+  conv_state = state["conv"] if state is not None else None
+  bc_state = state["bc_conv"] if state is not None else None
+  xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+  bcat, new_bc = _causal_conv(bcat, p["bc_filter_w"], bc_state)
+  xin = jax.nn.silu(xin)
+  bcat = jax.nn.silu(bcat)
+
+  b_ssm = bcat[..., : g * n].reshape(bsz, s, g, n)
+  c_ssm = bcat[..., g * n:].reshape(bsz, s, g, n)
+  dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                       p["dt_bias"].astype(jnp.float32))
+  a = -jnp.exp(p["A_log"].astype(jnp.float32))
+  xh = xin.reshape(bsz, s, h, pdim)
+
+  if mode == "decode":
+    # single-step recurrence (s == 1)
+    st = state["ssm"].astype(jnp.float32)
+    da = jnp.exp(dt[:, 0] * a[None, :])                 # (B,H)
+    hg = h // g
+    b1 = jnp.repeat(b_ssm[:, 0], hg, axis=1)            # (B,H,N)
+    c1 = jnp.repeat(c_ssm[:, 0], hg, axis=1)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], b1,
+                     xh[:, 0].astype(jnp.float32))
+    st = st * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", c1, st)[:, None]    # (B,1,H,P)
+    new_state = {"ssm": st, "conv": new_conv, "bc_conv": new_bc}
+  else:
+    y, final = ssd_chunked(xh, dt, a, b_ssm, c_ssm, cfg.ssm_chunk)
+    new_state = ({"ssm": final, "conv": new_conv, "bc_conv": new_bc}
+                 if mode == "prefill" else None)
+
+  y = y + p["ssd_skip_D"].astype(jnp.float32)[None, None, :, None] * \
+      xh.astype(jnp.float32)
+  y = y.reshape(bsz, s, h * pdim).astype(dt_)
+  y = cm.rms_norm(y * jax.nn.silu(z), p["ssd_norm_scale"], cfg.norm_eps)
+  out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+  return out, new_state
+
+
+def init_ssm_state(cfg: cm.ModelConfig, n_layers: int, batch: int):
+  h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+  k = cfg.conv_kernel
+  return {
+      "ssm": jnp.zeros((n_layers, batch, h, n, pdim), jnp.float32),
+      "conv": jnp.zeros((n_layers, batch, k - 1, cfg.d_inner), cfg.dtype),
+      "bc_conv": jnp.zeros(
+          (n_layers, batch, k - 1, 2 * cfg.ssm_ngroups * cfg.ssm_state),
+          cfg.dtype),
+  }

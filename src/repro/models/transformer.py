@@ -1,0 +1,117 @@
+"""Decoder-only LM assembly (dense + MoE) — scan-over-layers throughout.
+
+Covers: tinyllama, qwen2.5, granite, h2o-danube (SWA), mixtral (MoE+SWA),
+phi3.5-moe (MoE), chameleon (qk-norm early-fusion VLM backbone).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+
+Array = jax.Array
+
+
+def padded_vocab(cfg: cm.ModelConfig, mult: int = 256) -> int:
+  return -(-cfg.vocab // mult) * mult
+
+
+def init_lm_params(key, cfg: cm.ModelConfig):
+  ks = cm.split_keys(key, 6)
+  L = cfg.n_layers
+  vp = padded_vocab(cfg)
+  p = {
+      "embed": (jax.random.normal(ks[0], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+      "final_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+      "blocks": {
+          "ln1_norm_scale": jnp.ones((L, cfg.d_model), cfg.param_dtype),
+          "ln2_norm_scale": jnp.ones((L, cfg.d_model), cfg.param_dtype),
+          "attn": attn_mod.attn_params(ks[1], cfg, L),
+      },
+  }
+  if cfg.n_experts:
+    p["blocks"]["moe"] = moe_mod.moe_params(ks[2], cfg, L)
+  else:
+    p["blocks"]["mlp"] = mlp_mod.mlp_params(ks[2], cfg, L)
+  if not cfg.tie_embeddings:
+    p["lm_head"] = (jax.random.normal(ks[3], (vp, cfg.d_model)) *
+                    0.02).astype(cfg.param_dtype)
+  return p
+
+
+def _block(lp, cfg: cm.ModelConfig, x, positions, *, mode, cache, cache_len,
+           impl):
+  x = cm.constrain_acts(x)
+  h = cm.rms_norm(x, lp["ln1_norm_scale"], cfg.norm_eps)
+  a, kv = attn_mod.attention(lp["attn"], cfg, h, positions, mode=mode,
+                             layer_cache=cache, cache_len=cache_len,
+                             impl=impl)
+  x = x + a
+  h = cm.rms_norm(x, lp["ln2_norm_scale"], cfg.norm_eps)
+  if cfg.n_experts:
+    m, aux = moe_mod.moe_block(lp["moe"], cfg, h)
+  else:
+    m, aux = mlp_mod.mlp(lp["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+  return x + m, kv, aux
+
+
+def logits_from(p, cfg: cm.ModelConfig, x: Array) -> Array:
+  head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+  return jnp.einsum("bsd,vd->bsv", x, head.astype(cfg.dtype))
+
+
+def forward_lm(p, cfg: cm.ModelConfig, tokens_or_embeds: Array,
+               positions: Optional[Array] = None, *, mode: str = "train",
+               cache=None, impl: str = "xla", remat: str = "none"):
+  """Returns (logits, new_cache_or_None, aux_loss).
+
+  tokens_or_embeds: int32 token ids (B,S) or precomputed embeddings (B,S,D)
+  (modality-frontend stub path).  For decode, S == 1 and ``cache`` must be an
+  ``attn_mod.init_cache`` pytree (layer-stacked).
+  """
+  if tokens_or_embeds.ndim == 2:
+    x = jnp.take(p["embed"], tokens_or_embeds, axis=0).astype(cfg.dtype)
+  else:
+    x = tokens_or_embeds.astype(cfg.dtype)
+  b, s = x.shape[:2]
+  cache_len = cache["len"] if cache is not None else None
+  if positions is None:
+    base = cache_len if mode == "decode" else 0
+    positions = base + jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+
+  def body(carry, xs):
+    x = carry
+    lp, layer_cache = xs
+    x, kv, aux = _block(lp, cfg, x, positions, mode=mode, cache=layer_cache,
+                        cache_len=cache_len, impl=impl)
+    return x, (kv, aux)
+
+  if remat == "full":
+    body = jax.checkpoint(body)
+  elif remat == "dots":
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+  layer_caches = ({"k": cache["k"], "v": cache["v"]}
+                  if cache is not None else None)
+  x, (kvs, auxs) = jax.lax.scan(body, x, (p["blocks"], layer_caches))
+
+  if mode == "prefill":
+    x = x[:, -1:]  # serving only needs next-token logits; keeps V-dim math tiny
+  x = cm.rms_norm(x, p["final_norm_scale"], cfg.norm_eps)
+  logits = logits_from(p, cfg, x)
+
+  new_cache = None
+  if mode == "prefill":
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "len": jnp.asarray(s, jnp.int32)}
+  elif mode == "decode":
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "len": cache_len + 1}
+  return logits, new_cache, jnp.mean(auxs)

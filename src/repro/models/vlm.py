@@ -1,0 +1,42 @@
+"""Chameleon-style early-fusion VLM utilities.
+
+The backbone is the dense transformer (qk_norm=True per chameleon); images
+enter as VQ codebook token ids *fused into the text stream*.  The VQ
+image-tokenizer front-end is a STUB per the assignment — but its core
+computation, nearest-codebook search, is exactly the paper's ``addnorm``
+SIMD² instruction, so `vq_tokenize` below runs on the SIMD² kernel path:
+D[i,j] = Σ_k (patch_i[k] − code_j[k])², then argmin over j.
+
+This is the "technique applies directly" row of DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mmo import mmo
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def vq_tokenize(patch_embeds: Array, codebook: Array, *,
+                backend: str = "auto") -> Array:
+  """patch_embeds: (..., P, D); codebook: (K, D) → token ids (..., P).
+
+  Uses SIMD².addnorm (MXU-rewrite backend by default; 'pallas' routes to the
+  kernel; 'vector' is the no-SIMD²-unit arm)."""
+  flat = patch_embeds.reshape(-1, patch_embeds.shape[-1])
+  d2 = mmo(flat, codebook.T, op="addnorm", backend=backend)
+  ids = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+  return ids.reshape(patch_embeds.shape[:-1])
+
+
+def fuse_streams(text_tokens: Array, image_tokens: Array,
+                 image_token_offset: int) -> Array:
+  """Early fusion: image token ids are shifted into their reserved vocab
+  range and concatenated ahead of the text tokens."""
+  return jnp.concatenate(
+      [image_tokens + image_token_offset, text_tokens], axis=-1)

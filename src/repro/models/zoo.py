@@ -1,0 +1,121 @@
+"""Unified model API: one (init, forward, init_cache) triple per family.
+
+    params = zoo.init(cfg, rng)
+    logits, cache, aux = zoo.forward(params, cfg, batch, mode=..., ...)
+
+``batch`` is a dict: {'tokens': (B,S) int32} for LMs, plus
+{'src_embeds': (B,S_src,D)} for enc-dec / modality-stub archs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import common as cm
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf_mod
+
+Array = jax.Array
+
+_TF_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init(cfg: cm.ModelConfig, key) -> dict:
+  if cfg.family in _TF_FAMILIES:
+    return tf_mod.init_lm_params(key, cfg)
+  if cfg.family == "ssm":
+    return _init_ssm_lm(key, cfg)
+  if cfg.family == "hybrid":
+    return hybrid_mod.init_hybrid_params(key, cfg)
+  if cfg.family == "encdec":
+    return encdec_mod.init_encdec_params(key, cfg)
+  raise ValueError(cfg.family)
+
+
+def _init_ssm_lm(key, cfg: cm.ModelConfig) -> dict:
+  ks = cm.split_keys(key, 4)
+  vp = tf_mod.padded_vocab(cfg)
+  return {
+      "embed": (jax.random.normal(ks[0], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+      "final_norm_scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+      "blocks": {
+          "ln_norm_scale": jnp.ones((cfg.n_layers, cfg.d_model),
+                                    cfg.param_dtype),
+          "ssm": ssm_mod.ssm_params(ks[1], cfg, cfg.n_layers),
+      },
+      "lm_head": (jax.random.normal(ks[2], (vp, cfg.d_model)) * 0.02).astype(
+          cfg.param_dtype),
+  }
+
+
+def _forward_ssm_lm(p, cfg, tokens, *, mode="train", cache=None,
+                    remat="none"):
+  x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.dtype)
+  state = cache["ssm"] if cache is not None else None
+
+  def body(x, xs):
+    lp, st = xs
+    x = cm.constrain_acts(x)
+    h = cm.rms_norm(x, lp["ln_norm_scale"], cfg.norm_eps)
+    y, new_st = ssm_mod.ssm_block(lp["ssm"], cfg, h, mode=mode, state=st)
+    return x + y, new_st
+
+  if remat == "full":
+    body = jax.checkpoint(body)
+  x, new_states = jax.lax.scan(body, x, (p["blocks"], state))
+  if mode == "prefill":
+    x = x[:, -1:]
+  x = cm.rms_norm(x, p["final_norm_scale"], cfg.norm_eps)
+  logits = tf_mod.logits_from(p, cfg, x)
+  new_cache = None
+  if mode in ("prefill", "decode"):
+    s = tokens.shape[1]
+    new_len = (jnp.asarray(s, jnp.int32) if mode == "prefill"
+               else cache["len"] + 1)
+    new_cache = {"ssm": new_states, "len": new_len}
+  return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def forward(p, cfg: cm.ModelConfig, batch: dict, *, mode: str = "train",
+            cache=None, enc_out=None, impl: str = "xla",
+            remat: str = "none"):
+  """Returns (logits, new_cache_or_None, aux_loss)."""
+  if cfg.family in _TF_FAMILIES:
+    inputs = batch.get("src_embeds", batch.get("tokens"))
+    return tf_mod.forward_lm(p, cfg, inputs, mode=mode, cache=cache,
+                             impl=impl, remat=remat)
+  if cfg.family == "ssm":
+    return _forward_ssm_lm(p, cfg, batch["tokens"], mode=mode, cache=cache,
+                           remat=remat)
+  if cfg.family == "hybrid":
+    return hybrid_mod.forward_hybrid(p, cfg, batch["tokens"], mode=mode,
+                                     cache=cache, impl=impl, remat=remat)
+  if cfg.family == "encdec":
+    # decode passes precomputed enc_out (in batch or kwarg) — no src needed
+    enc_out = batch.get("enc_out", enc_out)
+    return encdec_mod.forward_encdec(p, cfg, batch.get("src_embeds"),
+                                     batch["tokens"], mode=mode, cache=cache,
+                                     enc_out=enc_out, impl=impl, remat=remat)
+  raise ValueError(cfg.family)
+
+
+def init_cache(cfg: cm.ModelConfig, batch: int, max_len: int):
+  if cfg.family in _TF_FAMILIES or cfg.family == "encdec":
+    n_layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    return attn_mod.init_cache(cfg, n_layers, batch, max_len)
+  if cfg.family == "ssm":
+    st = ssm_mod.init_ssm_state(cfg, cfg.n_layers, batch)
+    return {"ssm": st, "len": jnp.zeros((), jnp.int32)}
+  if cfg.family == "hybrid":
+    return hybrid_mod.init_hybrid_cache(cfg, batch, max_len)
+  raise ValueError(cfg.family)
+
+
+def param_count(params) -> int:
+  return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))

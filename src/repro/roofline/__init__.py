@@ -1,0 +1,2 @@
+"""Roofline derivation from compiled dry-run artifacts."""
+from repro.roofline import analysis, collectives, hw

@@ -1,0 +1,93 @@
+"""Three-term roofline derivation from a compiled dry-run cell.
+
+    compute    = HLO_FLOPs / (chips · 197e12)
+    memory     = HLO_bytes / (chips · 819e9)
+    collective = collective_bytes_per_device / (ICI links · 50e9)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+the ring-model per-device traffic from ``collectives.collective_bytes``
+(already per-device, so no further division by chips).  MODEL_FLOPS uses the
+6·N·D (train) / 2·N·D (decode-token) convention with N = active params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.roofline import hw
+
+
+@dataclasses.dataclass
+class Roofline:
+  arch: str
+  shape: str
+  mesh: str
+  chips: int
+  hlo_flops: float
+  hlo_bytes: float
+  coll_bytes: float          # per device
+  coll_breakdown: dict
+  model_flops: float
+  peak_memory_per_dev: Optional[float] = None
+
+  @property
+  def t_compute(self) -> float:
+    return self.hlo_flops / (self.chips * hw.PEAK_FLOPS_BF16)
+
+  @property
+  def t_memory(self) -> float:
+    return self.hlo_bytes / (self.chips * hw.HBM_BW)
+
+  @property
+  def t_collective(self) -> float:
+    return self.coll_bytes / (hw.ICI_LINKS * hw.ICI_BW_PER_LINK)
+
+  @property
+  def bottleneck(self) -> str:
+    terms = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+    return max(terms, key=terms.get)
+
+  @property
+  def t_bound(self) -> float:
+    return max(self.t_compute, self.t_memory, self.t_collective)
+
+  @property
+  def useful_ratio(self) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'."""
+    return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+  @property
+  def mfu_bound(self) -> float:
+    """Roofline-implied MFU upper bound: useful FLOPs per chip-second at the
+    bound time vs peak."""
+    if self.t_bound == 0:
+      return 0.0
+    return (self.model_flops / (self.chips * self.t_bound)) / \
+        hw.PEAK_FLOPS_BF16
+
+  def row(self) -> dict:
+    return {
+        "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+        "chips": self.chips,
+        "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+        "coll_bytes_per_dev": self.coll_bytes,
+        "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+        "t_collective_s": self.t_collective,
+        "bottleneck": self.bottleneck,
+        "model_flops": self.model_flops,
+        "useful_ratio": self.useful_ratio,
+        "mfu_bound": self.mfu_bound,
+        "peak_mem_per_dev": self.peak_memory_per_dev,
+        "coll_breakdown": self.coll_breakdown,
+    }
+
+
+def model_flops_estimate(n_params_active: float, shape_kind: str,
+                         tokens: float) -> float:
+  """6·N·D for a train step; 2·N per generated token for decode; 2·N·D for
+  prefill (forward only)."""
+  if shape_kind == "train":
+    return 6.0 * n_params_active * tokens
+  return 2.0 * n_params_active * tokens

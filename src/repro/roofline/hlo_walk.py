@@ -1,0 +1,288 @@
+"""Loop-corrected cost extraction from post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so for
+scan-over-layers programs it under-reports FLOPs/bytes/collectives by the
+trip count (×L layers, ×KV chunks, ×grad-accum).  This walker parses the HLO
+module into computations and recursively multiplies per-computation costs by
+the loop trip counts XLA records in ``backend_config={"known_trip_count":
+{"n":"L"}}``.
+
+Per computation it accumulates:
+  * ``flops``      — dot ops: 2 · |output| · contraction_size (dots dominate
+                     transformer compute; elementwise flops are ignored and
+                     the method is recorded in EXPERIMENTS.md),
+  * ``bytes``      — per-op HBM traffic: operand + output tensor bytes of
+                     top-level (post-fusion) ops in a traffic allowlist —
+                     fusion internals are on-chip by construction,
+  * ``coll_bytes`` — ring-model collective traffic (see collectives.py).
+
+Validated against unrolled-scan programs (tests/test_roofline.py): the
+walker and XLA agree when no loops are present, and the walker alone is
+consistent across rolled/unrolled variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+from repro.roofline.collectives import (_COLL_KINDS, _DTYPE_BYTES, _SHAPE_RE,
+                                        _group_size, _shape_bytes)
+
+# ops whose operand/output tensors move through HBM (post-fusion HLO)
+_TRAFFIC_OPS = {
+    "fusion", "dot", "copy", "convert", "reduce", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "slice", "concatenate", "pad",
+    "broadcast", "iota", "transpose", "reverse", "sort", "select-and-scatter",
+    "reduce-window", "rng", "exponential", "log", "cholesky",
+    "triangular-solve", "convolution", "rng-bit-generator", "compare",
+    "add", "multiply", "subtract", "divide", "maximum", "minimum", "select",
+    "tanh", "negate", "abs", "rsqrt", "sqrt", "power",
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+    r"(?:\.\d+)?\(([^)]*)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+@dataclasses.dataclass
+class Cost:
+  flops: float = 0.0
+  bytes: float = 0.0
+  coll_bytes: float = 0.0
+  coll_breakdown: dict = dataclasses.field(default_factory=dict)
+
+  def add(self, other: "Cost", mult: float = 1.0):
+    self.flops += other.flops * mult
+    self.bytes += other.bytes * mult
+    self.coll_bytes += other.coll_bytes * mult
+    for k, v in other.coll_breakdown.items():
+      self.coll_breakdown[k] = self.coll_breakdown.get(k, 0.0) + v * mult
+
+
+@dataclasses.dataclass
+class _Op:
+  name: str
+  out_type: str
+  kind: str
+  operands: list
+  tail: str
+
+
+class HloModule:
+  def __init__(self, text: str):
+    self.comps: dict[str, list[_Op]] = {}
+    self._parse(text)
+    self._memo: dict[str, Cost] = {}
+
+  def _parse(self, text: str):
+    cur = None
+    for raw in text.splitlines():
+      line = raw.rstrip()
+      s = line.strip()
+      if not s or s.startswith("//"):
+        continue
+      mc = _COMP_RE.match(s)
+      if mc and "=" not in s.split("(")[0]:
+        cur = mc.group(1)
+        self.comps[cur] = []
+        continue
+      if s == "}" or cur is None:
+        continue
+      mo = _OP_RE.match(line)
+      if not mo:
+        continue
+      name, out_type, kind, operand_str, tail = mo.groups()
+      operands = [o.strip().lstrip("%") for o in operand_str.split(",")
+                  if o.strip().startswith("%")]
+      self.comps[cur].append(_Op(name, out_type, kind, operands, tail))
+
+  # -- per-op costing --------------------------------------------------------
+
+  def _dot_flops(self, op: _Op, types: dict) -> float:
+    out_b = _shape_elems(op.out_type)
+    lhs_type = types.get(op.operands[0]) if op.operands else None
+    if lhs_type is None:
+      return 0.0
+    m = _CONTRACT_RE.search(op.tail)
+    contract = 1
+    lhs_dims = _shape_dims(lhs_type)
+    if m and lhs_dims:
+      for d in m.group(1).split(","):
+        if d:
+          contract *= lhs_dims[int(d)]
+    return 2.0 * out_b * contract
+
+  def comp_cost(self, name: str) -> Cost:
+    if name in self._memo:
+      return self._memo[name]
+    c = Cost()
+    types: dict[str, str] = {}
+    for op in self.comps.get(name, []):
+      types[op.name] = op.out_type
+    for op in self.comps.get(name, []):
+      kind = op.kind
+      if kind == "while":
+        trip = 1
+        mt = _TRIP_RE.search(op.tail)
+        if mt:
+          trip = int(mt.group(1))
+        mb = _BODY_RE.search(op.tail)
+        if mb:
+          c.add(self.comp_cost(mb.group(1)), trip)
+        continue
+      if kind == "conditional":
+        mbr = _BRANCHES_RE.search(op.tail)
+        if mbr:
+          names = [x.strip().lstrip("%") for x in mbr.group(1).split(",")]
+          for n in names:
+            c.add(self.comp_cost(n), 1.0 / max(1, len(names)))
+        continue
+      if kind in ("call", "async-start"):
+        mc2 = _CALLS_RE.search(op.tail)
+        if mc2:
+          c.add(self.comp_cost(mc2.group(1)))
+        continue
+
+      coll = next((k for k in _COLL_KINDS if kind.startswith(k)), None)
+      if coll is not None and not kind.endswith("-done"):
+        n = _group_size(op.tail)
+        b = _shape_bytes(op.out_type)
+        if coll == "all-reduce":
+          traffic = 2.0 * (n - 1) / max(n, 1) * b
+        elif coll == "collective-permute":
+          traffic = float(b)
+        else:
+          traffic = (n - 1) / max(n, 1) * b
+        c.coll_bytes += traffic
+        c.coll_breakdown[coll] = c.coll_breakdown.get(coll, 0.0) + traffic
+        c.bytes += 2.0 * b  # read + write through HBM
+        continue
+
+      if kind.startswith("dot"):
+        c.flops += self._dot_flops(op, types)
+        c.bytes += _shape_bytes(op.out_type) + sum(
+            _shape_bytes(types.get(o, "")) for o in op.operands)
+        continue
+
+      if kind == "fusion":
+        # fused dots still execute — descend for flops; bytes use
+        # slice-aware effective reads (a fused dynamic-slice of a stacked
+        # weight reads one layer, not the whole stack).
+        mf = _CALLS_RE.search(op.tail)
+        if mf:
+          sub = self.comp_cost(mf.group(1))
+          c.flops += sub.flops
+          c.bytes += self._fusion_bytes(op, mf.group(1), types)
+        else:
+          c.bytes += _shape_bytes(op.out_type) + sum(
+              _shape_bytes(types.get(o, "")) for o in op.operands)
+        continue
+
+      if kind in ("dynamic-slice", "slice", "gather"):
+        c.bytes += 2.0 * _shape_bytes(op.out_type)  # read slice + write
+        continue
+      if kind == "dynamic-update-slice":
+        upd = types.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        c.bytes += 2.0 * _shape_bytes(upd)  # read update + write slice region
+        continue
+
+      if kind in _TRAFFIC_OPS:
+        c.bytes += _shape_bytes(op.out_type) + sum(
+            _shape_bytes(types.get(o, "")) for o in op.operands)
+
+    self._memo[name] = c
+    return c
+
+  def _fusion_bytes(self, op: _Op, callee: str, caller_types: dict) -> float:
+    """HBM traffic of one fusion: slice-aware reads + alias-aware writes."""
+    body = self.comps.get(callee, [])
+    # parameter name → full bytes (from its declaration inside the callee)
+    param_full: dict[str, float] = {}
+    for fop in body:
+      if fop.kind == "parameter":
+        param_full[fop.name] = _shape_bytes(fop.out_type)
+    reads: dict[str, float] = {k: 0.0 for k in param_full}
+    root = body[-1] if body else None
+    dus_alias_param = None
+    if root is not None and root.kind == "dynamic-update-slice":
+      # in-place cache update: the pass-through buffer is aliased, the write
+      # is only the update region
+      if root.operands and root.operands[0] in param_full:
+        dus_alias_param = root.operands[0]
+    for fop in body:
+      if fop.kind == "parameter":
+        continue
+      for o in fop.operands:
+        if o not in param_full:
+          continue
+        if fop.kind in ("dynamic-slice", "slice", "gather"):
+          reads[o] += _shape_bytes(fop.out_type)
+        elif fop.kind == "dynamic-update-slice" and o == fop.operands[0]:
+          continue  # aliased pass-through, not a read
+        else:
+          reads[o] += param_full[o]
+    total_read = sum(min(param_full[k], reads[k]) for k in param_full
+                     if k != dus_alias_param)
+    if dus_alias_param is not None:
+      total_read += min(param_full[dus_alias_param],
+                        reads[dus_alias_param])
+      upd_bytes = 0.0
+      if root is not None and len(root.operands) > 1:
+        # update operand may be a param or an internal op — look in both
+        upd_name = root.operands[1]
+        upd_bytes = param_full.get(upd_name, 0.0)
+        if not upd_bytes:
+          for fop in body:
+            if fop.name == upd_name:
+              upd_bytes = _shape_bytes(fop.out_type)
+              break
+      write = upd_bytes
+    else:
+      write = _shape_bytes(op.out_type)
+    return total_read + write
+
+  def entry_cost(self) -> Cost:
+    # entry is the computation named main* or the last parsed
+    entry = None
+    for n in self.comps:
+      if n.startswith("main"):
+        entry = n
+    if entry is None:
+      entry = list(self.comps)[-1]
+    return self.comp_cost(entry)
+
+
+def _shape_dims(t: str):
+  m = _SHAPE_RE.search(t or "")
+  if not m:
+    return []
+  dims = m.group(2)
+  return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _shape_elems(t: str) -> float:
+  total = 0
+  for dt, dims in _SHAPE_RE.findall(t or ""):
+    if dt not in _DTYPE_BYTES:
+      continue
+    n = 1
+    if dims:
+      for d in dims.split(","):
+        if d:
+          n *= int(d)
+    total += n
+  return float(total)
+
+
+def module_cost(hlo_text: str) -> Cost:
+  return HloModule(hlo_text).entry_cost()

@@ -1,0 +1,13 @@
+"""TPU v5e hardware constants (assignment-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (~50 GB/s)
+ICI_LINKS = 4                 # v5e: 4 ICI links per chip (2D torus x,y × 2)
+VMEM_BYTES = 128 * 2**20      # ~128 MiB vector memory
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+
+# VPU throughput: 8 lanes×128 sublanes... effective vector FLOPs ≈ peak/16
+# at bf16 (the MXU:VPU ratio that mirrors the paper's TensorCore:CUDA-core
+# gap; used by the microbenchmark speedup model).
+VPU_RATIO = 1.0 / 16.0

@@ -1,0 +1,117 @@
+"""Sharded AdamW with global-norm clipping and decoupled weight decay.
+
+Optimizer moments inherit the parameter PartitionSpecs (ZeRO-style: with
+``Parallelism.fsdp`` the master weights *and* both moments are sharded over
+the data axis, so optimizer memory scales 1/(dp·tp)).  Pure pytree — no
+optax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+  lr: float = 3e-4
+  b1: float = 0.9
+  b2: float = 0.95
+  eps: float = 1e-8
+  weight_decay: float = 0.1
+  grad_clip: float = 1.0
+  warmup_steps: int = 100
+  total_steps: int = 10000
+  min_lr_ratio: float = 0.1
+
+
+def lr_schedule(c: AdamWConfig, step: Array) -> Array:
+  """Linear warmup → cosine decay to min_lr_ratio·lr."""
+  step = step.astype(jnp.float32)
+  warm = step / jnp.maximum(1.0, c.warmup_steps)
+  prog = (step - c.warmup_steps) / jnp.maximum(
+      1.0, c.total_steps - c.warmup_steps)
+  prog = jnp.clip(prog, 0.0, 1.0)
+  cos = c.min_lr_ratio + (1 - c.min_lr_ratio) * 0.5 * (
+      1 + jnp.cos(jnp.pi * prog))
+  return c.lr * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+  zeros = lambda p: jnp.zeros_like(p)
+  return {
+      "m": jax.tree.map(zeros, params),
+      "v": jax.tree.map(zeros, params),
+      "step": jnp.zeros((), jnp.int32),
+  }
+
+
+def global_norm(tree) -> Array:
+  return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path: str) -> bool:
+  """No weight decay on norms/biases/1-D scales (standard practice)."""
+  needle = path.lower()
+  return not any(s in needle for s in ("norm", "bias", "scale", "a_log",
+                                       "dt_", "skip_d"))
+
+
+def _paths(tree, prefix=""):
+  if isinstance(tree, dict):
+    out = {}
+    for k, v in tree.items():
+      sub = _paths(v, f"{prefix}/{k}")
+      out[k] = sub
+    return out
+  return prefix
+
+
+def adamw_update(c: AdamWConfig, params, grads, opt_state):
+  """Returns (new_params, new_opt_state, metrics)."""
+  gnorm = global_norm(grads)
+  clip = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9))
+  step = opt_state["step"] + 1
+  lr = lr_schedule(c, step)
+  b1, b2 = c.b1, c.b2
+  bc1 = 1 - b1 ** step.astype(jnp.float32)
+  bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+  path_tree = _paths(params)
+
+  def upd(path, p, g, m, v):
+    g = g.astype(jnp.float32) * clip
+    p32 = p.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    delta = mhat / (jnp.sqrt(vhat) + c.eps)
+    if _decay_mask(path):
+      delta = delta + c.weight_decay * p32
+    return (p32 - lr * delta).astype(p.dtype), m, v
+
+  flat_paths = jax.tree.leaves(path_tree)
+  flat_p = jax.tree.leaves(params)
+  flat_g = jax.tree.leaves(grads)
+  flat_m = jax.tree.leaves(opt_state["m"])
+  flat_v = jax.tree.leaves(opt_state["v"])
+  treedef = jax.tree.structure(params)
+
+  new_p, new_m, new_v = [], [], []
+  for path, p, g, m, v in zip(flat_paths, flat_p, flat_g, flat_m, flat_v):
+    a, b_, cc = upd(path, p, g, m, v)
+    new_p.append(a)
+    new_m.append(b_)
+    new_v.append(cc)
+
+  return (jax.tree.unflatten(treedef, new_p),
+          {"m": jax.tree.unflatten(treedef, new_m),
+           "v": jax.tree.unflatten(treedef, new_v),
+           "step": step},
+          {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,177 @@
+"""Train / serve step factories — the functions the launcher jits and the
+dry-run lowers.
+
+``make_train_step`` builds a (state, batch) → (state, metrics) function with:
+  * next-token cross-entropy (+ MoE load-balance aux, weight 0.01),
+  * gradient microbatching (sequential accumulation over `accum` slices —
+    the compute/memory knob at fixed global batch),
+  * AdamW update with global-norm clip,
+  * donated state (in-place buffers at scale).
+
+``make_prefill_step`` / ``make_decode_step`` are the two serving lowerings
+(decode_* / long_* shapes lower the decode step, per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import zoo
+from repro.train import optimizer as opt_mod
+
+Array = jax.Array
+
+
+def xent_loss(logits: Array, labels: Array, vocab: int) -> Array:
+  """Mean next-token cross-entropy; labels ≥ vocab (pad ids) are masked."""
+  logits = logits.astype(jnp.float32)
+  logz = jax.nn.logsumexp(logits, axis=-1)
+  gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+  nll = logz - gold
+  mask = (labels >= 0) & (labels < vocab)
+  return jnp.sum(nll * mask) / jnp.maximum(1.0, jnp.sum(mask))
+
+
+def loss_fn(params, cfg: cm.ModelConfig, batch: dict, *, impl: str = "xla",
+            remat: str = "none"):
+  logits, _, aux = zoo.forward(params, cfg, batch, mode="train", impl=impl,
+                               remat=remat)
+  loss = xent_loss(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab)
+  return loss + 0.01 * aux, (loss, aux)
+
+
+def make_train_step(cfg: cm.ModelConfig, oc: opt_mod.AdamWConfig, *,
+                    accum: int = 1, impl: str = "xla", remat: str = "none",
+                    grad_specs=None, zero2: bool = False,
+                    grad_comm_bf16: bool = False):
+  """Returns train_step((params, opt_state), batch) → (state, metrics).
+
+  ``grad_specs`` (pytree of PartitionSpec matching params): pins gradient
+  shardings to the parameter layout — without it GSPMD materializes
+  replicated fp32 gradients for non-stacked (shared/tied) weights before
+  reducing, which blows per-device memory at scale.
+
+  ``zero2``: ZeRO-2 collective schedule — the fp32 master stays
+  fsdp-sharded, but bf16 *compute* params are gathered ONCE per step
+  (outside the microbatch loop) instead of re-gathered per microbatch
+  (ZeRO-3/FSDP default).  Trades +params(bf16)/tp_size resident memory for
+  an accum× reduction in parameter all-gather traffic; gradients are still
+  reduce-scattered back to the master sharding every microbatch.
+
+  ``grad_comm_bf16``: compress the per-microbatch cross-device gradient
+  reduction to bf16 (standard DDP-style compression; local accumulation
+  stays fp32) — halves the gradient all-reduce bytes, which dominate the
+  collective term for large dense models at high accum.
+  """
+  from jax.sharding import PartitionSpec
+
+  def _drop_fsdp(spec: PartitionSpec) -> PartitionSpec:
+    # remove data axes from a param spec (keep pure-TP sharding)
+    data_axes = set()
+    for entry in spec:
+      for ax in (entry if isinstance(entry, tuple) else (entry,)):
+        if ax is not None and ("data" in str(ax) or "pod" in str(ax)):
+          data_axes.add(ax)
+
+    def strip(entry):
+      if isinstance(entry, tuple):
+        kept = tuple(a for a in entry if a not in data_axes)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+      return None if entry in data_axes else entry
+    return PartitionSpec(*(strip(e) for e in spec))
+
+  grad_fn = jax.value_and_grad(
+      functools.partial(loss_fn, cfg=cfg, impl=impl, remat=remat),
+      has_aux=True)
+
+  def pin(grads):
+    if grad_specs is None:
+      return grads
+    return jax.tree.map(
+        lambda s, g: jax.lax.with_sharding_constraint(g, s), grad_specs,
+        grads, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+  def gather_compute_params(params):
+    """bf16 copy of the master, unsharded over the data axes (one gather)."""
+    def one(s, p):
+      c = p.astype(cfg.dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p
+      return jax.lax.with_sharding_constraint(c, _drop_fsdp(s))
+    return jax.tree.map(one, grad_specs, params,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+  def microbatches(batch):
+    def split(x):
+      b = x.shape[0]
+      return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+  def train_step(state, batch):
+    params, opt_state = state
+    fwd_params = params
+    if zero2 and grad_specs is not None:
+      fwd_params = gather_compute_params(params)
+      # differentiate wrt the gathered bf16 copy; the master-spec pin below
+      # turns the parameter-gradient psum into a reduce-scatter
+      gfn = jax.value_and_grad(
+          functools.partial(loss_fn, cfg=cfg, impl=impl, remat=remat),
+          has_aux=True)
+    else:
+      gfn = grad_fn
+
+    def to_master(g):
+      if grad_comm_bf16:
+        # bf16 over the wire (the pin's reshard/reduce), fp32 local accum
+        g = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+        g = pin(g)
+        return jax.tree.map(lambda x: x.astype(jnp.float32), g)
+      return pin(jax.tree.map(lambda x: x.astype(jnp.float32), g))
+
+    if accum == 1:
+      (tot, (loss, aux)), grads = gfn(fwd_params, batch=batch)
+      grads = to_master(grads)
+    else:
+      mb = microbatches(batch)
+
+      def body(carry, mb_i):
+        g_acc, l_acc, a_acc = carry
+        (tot, (loss, aux)), g = gfn(fwd_params, batch=mb_i)
+        g = to_master(g)
+        return (pin(jax.tree.map(jnp.add, g_acc, g)), l_acc + loss,
+                a_acc + aux), None
+
+      g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params))
+      (grads, loss, aux), _ = jax.lax.scan(
+          body, (g0, jnp.zeros((), jnp.float32), jnp.zeros(())), mb)
+      grads = jax.tree.map(lambda g: g / accum, grads)
+      loss, aux = loss / accum, aux / accum
+
+    new_params, new_opt, om = opt_mod.adamw_update(oc, params, grads,
+                                                   opt_state)
+    metrics = {"loss": loss, "aux_loss": aux, **om}
+    return (new_params, new_opt), metrics
+
+  return train_step
+
+
+def make_prefill_step(cfg: cm.ModelConfig, *, impl: str = "xla"):
+  def prefill_step(params, batch):
+    logits, cache, _ = zoo.forward(params, cfg, batch, mode="prefill",
+                                   impl=impl)
+    return logits[:, -1, :], cache
+  return prefill_step
+
+
+def make_decode_step(cfg: cm.ModelConfig, *, greedy: bool = True):
+  def decode_step(params, cache, batch):
+    """batch: {'tokens': (B,1)} (+ 'src_embeds'/'enc_out' for enc-dec)."""
+    logits, cache, _ = zoo.forward(params, cfg, batch, mode="decode",
+                                   cache=cache,
+                                   enc_out=batch.get("enc_out"))
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return nxt[:, None], cache
+  return decode_step

@@ -1,0 +1,107 @@
+"""The 8 SIMD²-ized applications vs independent classic-algorithm baselines
+(the paper's §5.1.2 correctness-validation flow)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import baselines as bl
+from repro.apps import graphs
+from repro.apps import solvers as sv
+
+N = 40
+
+
+def _check_paths(got, ref, atol=1e-4):
+  g = np.asarray(got, np.float64)
+  fin = np.isfinite(ref)
+  np.testing.assert_allclose(g[fin], ref[fin], atol=atol, rtol=1e-5)
+  assert np.array_equal(~np.isfinite(g), ~fin)
+
+
+@pytest.mark.parametrize("algorithm", ["leyzorek", "bellman_ford",
+                                       "floyd_warshall"])
+def test_apsp(algorithm):
+  w = graphs.weighted_digraph(N, 0.25, seed=11)
+  ref = bl.apsp_np(np.where(np.eye(N, dtype=bool), 0, w))
+  got, _ = sv.apsp(w, algorithm=algorithm)
+  _check_paths(got, ref)
+
+
+def test_aplp():
+  w = graphs.dag(N, 0.25, seed=12)
+  ref = bl.aplp_np(w)
+  got, _ = sv.aplp(w)
+  g = np.asarray(got, np.float64)
+  fin = np.isfinite(ref)
+  np.testing.assert_allclose(g[fin], ref[fin], atol=1e-4)
+
+
+def test_maxcp():
+  c = graphs.capacity_graph(N, 0.25, seed=13)
+  ref = bl.maxcp_np(c)
+  got, _ = sv.maxcp(c)
+  fin = np.isfinite(ref)
+  np.testing.assert_allclose(np.asarray(got)[fin], ref[fin], atol=1e-4)
+
+
+def test_maxrp():
+  p = graphs.reliability_graph(N, 0.25, seed=14, maximize=True)
+  got, _ = sv.maxrp(p)
+  np.testing.assert_allclose(np.asarray(got), bl.maxrp_np(p), atol=1e-5)
+
+
+def test_minrp():
+  p = graphs.reliability_graph(N, 0.25, seed=15, maximize=False)
+  ref = bl.minrp_np(p)
+  got, _ = sv.minrp(p)
+  _check_paths(got, ref, atol=1e-5)
+
+
+def test_mst_minimax_and_edges():
+  w = graphs.undirected_weighted(32, 0.3, seed=16)
+  mm_ref = bl.minimax_paths_np(w)
+  mm, _ = sv.mst_minimax(w)
+  off = ~np.eye(32, dtype=bool)
+  fin = np.isfinite(mm_ref) & off
+  np.testing.assert_allclose(np.asarray(mm)[fin], mm_ref[fin], atol=1e-4)
+  edges_ref, _ = bl.kruskal_mst_np(w)
+  in_mst, _ = sv.mst_edges(w)
+  got = {(min(i, j), max(i, j))
+         for i, j in zip(*np.nonzero(np.asarray(in_mst)))}
+  assert got == edges_ref
+
+
+def test_gtc():
+  adj = graphs.boolean_digraph(64, 0.05, seed=17)
+  got, _ = sv.gtc(adj)
+  assert np.array_equal(np.asarray(got), bl.gtc_np(adj))
+
+
+@pytest.mark.parametrize("backend", ["xla", "vector"])
+def test_knn(backend):
+  ref_pts, qry = graphs.knn_points(200, 40, 24, seed=18)
+  d_ref, i_ref = bl.knn_np(ref_pts, qry, 8)
+  d_got, i_got = sv.knn(ref_pts, qry, k=8, backend=backend)
+  assert np.array_equal(np.asarray(i_got), i_ref)
+  np.testing.assert_allclose(np.asarray(d_got), d_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_knn_pallas_backend():
+  ref_pts, qry = graphs.knn_points(128, 16, 16, seed=19)
+  _, i_ref = bl.knn_np(ref_pts, qry, 4)
+  from repro.core.mmo import mmo
+  d2 = mmo(jnp.asarray(qry), jnp.asarray(ref_pts).T, op="addnorm",
+           backend="pallas", interpret=True)
+  i_got = np.argsort(np.asarray(d2), axis=1)[:, :4]
+  assert np.array_equal(i_got, i_ref)
+
+
+def test_convergence_check_early_exit():
+  """Leyzorek with convergence check must stop well before lg|V| on a
+  short-diameter graph (paper §6.4)."""
+  w = graphs.weighted_digraph(64, 0.9, seed=20)  # dense → diameter ~1-2
+  _, it_conv = sv.apsp(w, convergence=True)
+  _, it_max = sv.apsp(w, convergence=False)
+  assert int(it_conv) <= int(it_max)
+  # diameter ~2 ⇒ converges in ~⌈lg diam⌉ squarings + 1 verification pass
+  assert int(it_conv) <= 4

@@ -1,0 +1,68 @@
+"""Fault tolerance: atomic checkpointing, kill-and-restart exact resume."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_atomic_commit(tmp_path):
+  d = str(tmp_path)
+  state = {"a": np.arange(6, dtype=np.float32).reshape(2, 3)}
+  ckpt.save(d, 10, state)
+  assert ckpt.latest_step(d) == 10
+  ckpt.save(d, 20, {"a": state["a"] * 2})
+  assert ckpt.latest_step(d) == 20
+  out, step = ckpt.restore(d)
+  assert step == 20
+  np.testing.assert_array_equal(out["a"], state["a"] * 2)
+  # older checkpoint still restorable explicitly
+  out10, _ = ckpt.restore(d, step=10)
+  np.testing.assert_array_equal(out10["a"], state["a"])
+
+
+def test_restore_missing_raises(tmp_path):
+  with pytest.raises(FileNotFoundError):
+    ckpt.restore(str(tmp_path))
+
+
+def _run_train(args, check=True):
+  env = dict(os.environ, PYTHONPATH=SRC)
+  return subprocess.run(
+      [sys.executable, "-m", "repro.launch.train"] + args,
+      capture_output=True, text=True, env=env, check=check, timeout=600)
+
+
+def test_kill_and_resume_exact(tmp_path):
+  """Train 1→30 with a simulated node failure at step 20; resume must
+  produce the same final loss as an uninterrupted run (stateless data +
+  committed state = exact restart)."""
+  common = ["--arch", "tinyllama-1.1b", "--smoke", "--steps", "30",
+            "--batch", "4", "--seq", "32", "--lr", "1e-3",
+            "--ckpt-every", "10", "--log-every", "30"]
+  ref_dir = tmp_path / "ref"
+  r = _run_train(common + ["--ckpt-dir", str(ref_dir)])
+  ref_loss = [l for l in r.stdout.splitlines() if "loss=" in l][-1]
+
+  crash_dir = tmp_path / "crash"
+  r1 = subprocess.run(
+      [sys.executable, "-m", "repro.launch.train"] + common +
+      ["--ckpt-dir", str(crash_dir), "--fail-at", "20"],
+      capture_output=True, text=True,
+      env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+  assert r1.returncode == 42  # simulated failure
+  assert ckpt.latest_step(str(crash_dir)) == 20
+  r2 = _run_train(common + ["--ckpt-dir", str(crash_dir)])
+  assert "resumed from step 20" in r2.stdout
+  out_loss = [l for l in r2.stdout.splitlines() if "loss=" in l][-1]
+
+  def loss_of(line):
+    return float(line.split("loss=")[1].split()[0])
+  np.testing.assert_allclose(loss_of(out_loss), loss_of(ref_loss),
+                             rtol=1e-5)

@@ -1,0 +1,43 @@
+"""Launch-path guard: one real dry-run cell compiles against the production
+mesh in a subprocess (512 placeholder devices), and the cell JSON carries
+coherent roofline fields.  Slow (~1–2 min) but protects the entire
+specs/sharding/step/lowering chain."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles():
+  env = dict(os.environ, PYTHONPATH=SRC)
+  r = subprocess.run(
+      [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+       "tinyllama-1.1b", "--shape", "decode_32k", "--mesh", "single"],
+      capture_output=True, text=True, env=env, timeout=1200)
+  assert r.returncode == 0, r.stderr[-2000:]
+  row = json.loads(r.stdout.strip().splitlines()[-1])
+  assert row["status"] == "ok", row
+  assert row["chips"] == 256
+  assert row["peak_mem_per_dev"] < 16 * 2 ** 30
+  for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+    assert row[k] >= 0.0
+  assert row["bottleneck"] in ("compute", "memory", "collective")
+  assert row["hlo_flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_skip_reason():
+  env = dict(os.environ, PYTHONPATH=SRC)
+  r = subprocess.run(
+      [sys.executable, "-m", "repro.launch.dryrun", "--arch", "granite-8b",
+       "--shape", "long_500k", "--mesh", "single"],
+      capture_output=True, text=True, env=env, timeout=300)
+  assert r.returncode == 0
+  row = json.loads(r.stdout.strip().splitlines()[-1])
+  assert row["status"] == "skipped"
+  assert "full-attention" in row["reason"]

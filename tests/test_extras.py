@@ -1,0 +1,33 @@
+"""Table-1 extras: matrix inverse (mma ring) and k-means (addnorm)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.extras import kmeans, newton_inverse
+
+
+def test_newton_inverse():
+  rng = np.random.default_rng(11)
+  a = rng.standard_normal((24, 24)).astype(np.float32)
+  a = a @ a.T + 24 * np.eye(24, dtype=np.float32)  # well-conditioned SPD
+  inv, resid = newton_inverse(jnp.asarray(a))
+  np.testing.assert_allclose(np.asarray(inv), np.linalg.inv(a),
+                             rtol=1e-3, atol=1e-4)
+  assert float(resid) < 1e-3
+
+
+def test_kmeans_recovers_clusters():
+  rng = np.random.default_rng(12)
+  centers = np.array([[0, 0], [8, 8], [-8, 8]], np.float32)
+  pts = np.concatenate([
+      c + 0.3 * rng.standard_normal((50, 2)).astype(np.float32)
+      for c in centers])
+  cents, assign, inertia = kmeans(jnp.asarray(pts), k=3, iters=25)
+  # every found centroid is within 0.5 of a true center, each cluster pure
+  cents = np.asarray(cents)
+  d = np.linalg.norm(cents[:, None] - centers[None], axis=-1).min(axis=1)
+  assert (d < 0.5).all(), cents
+  assign = np.asarray(assign)
+  for g in range(3):
+    grp = assign[g * 50:(g + 1) * 50]
+    assert (grp == grp[0]).all()
+  assert float(inertia) < 0.3 ** 2 * 2 * 150 * 3  # loose noise bound

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the deliverable: each kernel swept over shapes/dtypes and
+assert_allclose'd against ref.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.semiring import ALL_OPS
+from repro.kernels import flash_attention, semiring_mmo
+from repro.kernels.ref import attention_ref, semiring_mmo_ref
+
+RNG = np.random.default_rng(1)
+
+MMO_SHAPES = [(128, 128, 128), (64, 200, 96), (13, 7, 5), (256, 384, 128),
+              (1, 128, 1)]
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+@pytest.mark.parametrize("shape", MMO_SHAPES)
+def test_semiring_kernel(op, shape):
+  m, k, n = shape
+  a = RNG.standard_normal((m, k)).astype(np.float32)
+  b = RNG.standard_normal((k, n)).astype(np.float32)
+  c = RNG.standard_normal((m, n)).astype(np.float32)
+  if op == "orand":
+    a, b, c = a > 0.8, b > 0.8, c > 1.5
+  got = semiring_mmo(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op,
+                     interpret=True)
+  ref = semiring_mmo_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c),
+                         op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64),
+                             rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("op", ["mma", "minplus", "addnorm"])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_semiring_kernel_dtypes(op, dtype):
+  a = jnp.asarray(RNG.standard_normal((64, 96)), dtype)
+  b = jnp.asarray(RNG.standard_normal((96, 32)), dtype)
+  got = semiring_mmo(a, b, op=op, interpret=True)
+  ref = semiring_mmo_ref(a, b, op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64),
+                             rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("op", ["mma", "addnorm"])
+def test_faithful_vpu_variant(op):
+  """The paper-faithful ⊗-ALU path must agree with the MXU rewrite."""
+  a = jnp.asarray(RNG.standard_normal((40, 70)), jnp.float32)
+  b = jnp.asarray(RNG.standard_normal((70, 50)), jnp.float32)
+  got = semiring_mmo(a, b, op=op, interpret=True, faithful=True)
+  ref = semiring_mmo_ref(a, b, op=op)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4,
+                             atol=1e-4)
+
+
+def test_semiring_kernel_batched():
+  a = jnp.asarray(RNG.standard_normal((3, 2, 16, 32)), jnp.float32)
+  b = jnp.asarray(RNG.standard_normal((3, 2, 32, 24)), jnp.float32)
+  got = semiring_mmo(a, b, op="minplus", interpret=True)
+  ref = semiring_mmo_ref(a, b, op="minplus")
+  np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+FA_CASES = [
+    # b, h, hkv, sq, skv, d, causal, window
+    (2, 4, 2, 128, 128, 64, True, None),
+    (1, 8, 2, 96, 160, 32, True, None),
+    (2, 4, 4, 128, 128, 64, False, None),
+    (1, 4, 1, 200, 200, 64, True, 96),
+    (1, 2, 2, 64, 256, 128, True, None),
+    (1, 4, 4, 160, 160, 80, True, None),   # non-128-aligned head dim
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention(case):
+  b, h, hkv, sq, skv, d, causal, window = case
+  q = RNG.standard_normal((b, h, sq, d)).astype(np.float32)
+  k = RNG.standard_normal((b, hkv, skv, d)).astype(np.float32)
+  v = RNG.standard_normal((b, hkv, skv, d)).astype(np.float32)
+  kx = np.repeat(k, h // hkv, axis=1)
+  vx = np.repeat(v, h // hkv, axis=1)
+  ref = attention_ref(jnp.asarray(q), jnp.asarray(kx), jnp.asarray(vx),
+                      causal=causal, window=window)
+  got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal, window=window, bq=64, bkv=64,
+                        interpret=True)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+  q = jnp.asarray(RNG.standard_normal((1, 4, 64, 64)), jnp.bfloat16)
+  k = jnp.asarray(RNG.standard_normal((1, 4, 64, 64)), jnp.bfloat16)
+  v = jnp.asarray(RNG.standard_normal((1, 4, 64, 64)), jnp.bfloat16)
+  got = flash_attention(q, k, v, interpret=True)
+  ref = attention_ref(q, k, v)
+  np.testing.assert_allclose(np.asarray(got, np.float32),
+                             np.asarray(ref, np.float32), atol=3e-2)

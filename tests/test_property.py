@@ -1,0 +1,143 @@
+"""Hypothesis property tests on the system's algebraic invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALL_OPS, get_semiring, mmo, mmo_reference
+
+_dims = st.integers(min_value=1, max_value=12)
+_ops = st.sampled_from([o for o in ALL_OPS if o != "orand"])
+_vals = st.integers(min_value=-4, max_value=4)  # small ints: exact float math
+
+
+def _mat(draw, m, n, els):
+  return np.array(draw(st.lists(st.lists(els, min_size=n, max_size=n),
+                                min_size=m, max_size=m)), dtype=np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_k_split_invariance(data):
+  """⊕ over a split contraction equals the full contraction:
+  mmo(A,B) == mmo(A1,B1) ⊕ mmo(A2,B2) — the invariant every distributed
+  schedule (kspan/SUMMA/ring) relies on."""
+  op = data.draw(_ops)
+  m, k, n = data.draw(_dims), data.draw(st.integers(2, 12)), data.draw(_dims)
+  a = _mat(data.draw, m, k, _vals)
+  b = _mat(data.draw, k, n, _vals)
+  sr = get_semiring(op)
+  cut = data.draw(st.integers(1, k - 1))
+  full = mmo_reference(jnp.asarray(a), jnp.asarray(b), op=op)
+  part = sr.oplus(
+      mmo_reference(jnp.asarray(a[:, :cut]), jnp.asarray(b[:cut]), op=op),
+      mmo_reference(jnp.asarray(a[:, cut:]), jnp.asarray(b[cut:]), op=op))
+  np.testing.assert_allclose(np.asarray(full), np.asarray(part), atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_backend_equivalence(data):
+  op = data.draw(st.sampled_from(list(ALL_OPS)))
+  m, k, n = data.draw(_dims), data.draw(_dims), data.draw(_dims)
+  a = _mat(data.draw, m, k, _vals)
+  b = _mat(data.draw, k, n, _vals)
+  if op == "orand":
+    a, b = a > 0, b > 0
+  v = mmo(jnp.asarray(a), jnp.asarray(b), op=op, backend="vector", block_k=3)
+  x = mmo(jnp.asarray(a), jnp.asarray(b), op=op, backend="xla")
+  np.testing.assert_allclose(np.asarray(v, np.float64),
+                             np.asarray(x, np.float64), atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_oplus_monoid_laws(data):
+  """⊕ associative + commutative with the declared identity (on the values
+  each ring actually operates over)."""
+  op = data.draw(st.sampled_from(list(ALL_OPS)))
+  sr = get_semiring(op)
+  els = st.booleans() if sr.boolean else _vals
+  x = np.array(data.draw(st.lists(els, min_size=4, max_size=4)))
+  y = np.array(data.draw(st.lists(els, min_size=4, max_size=4)))
+  z = np.array(data.draw(st.lists(els, min_size=4, max_size=4)))
+  if not sr.boolean:
+    x, y, z = (v.astype(np.float32) for v in (x, y, z))
+  xj, yj, zj = jnp.asarray(x), jnp.asarray(y), jnp.asarray(z)
+  lhs = sr.oplus(sr.oplus(xj, yj), zj)
+  rhs = sr.oplus(xj, sr.oplus(yj, zj))
+  np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+  np.testing.assert_array_equal(np.asarray(sr.oplus(xj, yj)),
+                                np.asarray(sr.oplus(yj, xj)))
+  ident = sr.identity_like(x.shape, xj.dtype)
+  np.testing.assert_array_equal(np.asarray(sr.oplus(xj, ident)), x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_closure_idempotent(data):
+  """A closure is a fixed point: closing the closure changes nothing."""
+  from repro.core import leyzorek_closure, prepare_adjacency
+  op = data.draw(st.sampled_from(["minplus", "maxmin", "minmax"]))
+  n = data.draw(st.integers(2, 8))
+  w = _mat(data.draw, n, n, st.integers(1, 9))
+  adj = prepare_adjacency(jnp.asarray(w), op=op)
+  closed, _ = leyzorek_closure(adj, op=op)
+  again, _ = leyzorek_closure(closed, op=op)
+  np.testing.assert_allclose(np.asarray(closed), np.asarray(again),
+                             atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_checkpoint_roundtrip_pytree(data):
+  """save→restore is the identity on arbitrary nested dict pytrees."""
+  import tempfile
+  from repro.train import checkpoint as ckpt
+  depth = data.draw(st.integers(1, 3))
+
+  def build(d):
+    if d == 0:
+      shape = data.draw(st.tuples(st.integers(1, 4), st.integers(1, 4)))
+      return np.array(data.draw(st.lists(
+          st.floats(-10, 10, allow_nan=False, width=32),
+          min_size=shape[0] * shape[1],
+          max_size=shape[0] * shape[1]))).reshape(shape).astype(np.float32)
+    return {f"k{i}": build(d - 1) for i in range(data.draw(st.integers(1, 3)))}
+
+  tree = {"root": build(depth)}
+  with tempfile.TemporaryDirectory() as d:
+    ckpt.save(d, 7, tree)
+    out, step = ckpt.restore(d)
+  assert step == 7
+  flat_a = jnp.tree_util.tree_leaves(tree) if hasattr(jnp, "tree_util") else None
+  import jax
+  la, lb = jax.tree.leaves(tree), jax.tree.leaves(out)
+  assert len(la) == len(lb)
+  for x, y in zip(la, lb):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_pallas_kernel_random_shapes(data):
+  """Property sweep of the Pallas SIMD² kernel: random op × shape × dtype,
+  interpret-mode kernel ≡ pure-jnp oracle."""
+  from repro.kernels import semiring_mmo
+  from repro.kernels.ref import semiring_mmo_ref
+  op = data.draw(st.sampled_from(list(ALL_OPS)))
+  m = data.draw(st.integers(1, 40))
+  k = data.draw(st.integers(1, 40))
+  n = data.draw(st.integers(1, 40))
+  f32 = data.draw(st.booleans())
+  rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+  a = rng.standard_normal((m, k)).astype(np.float32)
+  b = rng.standard_normal((k, n)).astype(np.float32)
+  if op == "orand":
+    a, b = a > 0.7, b > 0.7
+  elif not f32:
+    a, b = a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+  got = semiring_mmo(jnp.asarray(a), jnp.asarray(b), op=op, interpret=True)
+  ref = semiring_mmo_ref(jnp.asarray(a), jnp.asarray(b), op=op)
+  tol = 1e-4 if (f32 or op == "orand") else 5e-2
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64), rtol=tol, atol=tol)

@@ -1,0 +1,83 @@
+"""Core semiring/mmo correctness: every op × backend × shape × dtype."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALL_OPS, get_semiring, mmo, mmo_reference
+
+RNG = np.random.default_rng(0)
+SHAPES = [(8, 16, 8), (13, 7, 5), (32, 64, 24)]
+
+
+def _operands(op, m, k, n, dtype=np.float32):
+  a = RNG.standard_normal((m, k)).astype(dtype)
+  b = RNG.standard_normal((k, n)).astype(dtype)
+  c = RNG.standard_normal((m, n)).astype(dtype)
+  if op == "orand":
+    return a > 0.5, b > 0.5, c > 1.0
+  return a, b, c
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("backend", ["vector", "xla"])
+def test_mmo_matches_reference(op, shape, backend):
+  a, b, c = _operands(op, *shape)
+  got = mmo(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op,
+            backend=backend, block_k=5)
+  ref = mmo_reference(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64),
+                             rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["minplus", "maxmin", "mma"])
+def test_mmo_no_c_operand(op):
+  a, b, _ = _operands(op, 9, 11, 6)
+  got = mmo(jnp.asarray(a), jnp.asarray(b), op=op)
+  ref = mmo_reference(jnp.asarray(a), jnp.asarray(b), op=op)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_bf16_inputs(op):
+  a, b, c = _operands(op, 16, 32, 16)
+  if op != "orand":
+    a, b, c = (x.astype(jnp.bfloat16) for x in (a, b, c))
+  got = mmo(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op)
+  ref = mmo_reference(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64),
+                             rtol=5e-2, atol=5e-2)
+
+
+def test_infinity_sentinels_minplus():
+  """+inf sentinels (missing edges) must survive the contraction."""
+  a = np.full((4, 4), np.inf, np.float32)
+  np.fill_diagonal(a, 0)
+  a[0, 1] = 3.0
+  out = np.asarray(mmo(jnp.asarray(a), jnp.asarray(a), jnp.asarray(a),
+                       op="minplus"))
+  assert out[0, 1] == 3.0
+  assert np.isinf(out[0, 2])
+  assert out[0, 0] == 0.0
+
+
+def test_semiring_registry():
+  for op in ALL_OPS:
+    sr = get_semiring(op)
+    assert sr.name == op
+  with pytest.raises(ValueError):
+    get_semiring("nope")
+
+
+def test_identity_element():
+  """x ⊕ identity == x for every ring."""
+  for op in ALL_OPS:
+    sr = get_semiring(op)
+    x = jnp.asarray(RNG.standard_normal((4, 4)).astype(np.float32))
+    if sr.boolean:
+      x = x > 0
+    ident = sr.identity_like(x.shape, x.dtype)
+    np.testing.assert_array_equal(np.asarray(sr.oplus(x, ident)),
+                                  np.asarray(x))
