@@ -1,10 +1,15 @@
 """SIMD² core: semiring registry, mmo API, closure solvers, distribution."""
-from repro.core.semiring import ALL_OPS, Semiring, get as get_semiring
-from repro.core.mmo import mmo, mmo_reference
+from repro.core.semiring import (ALL_OPS, Semiring, contraction_pads,
+                                 get as get_semiring)
+from repro.core.mmo import mmo, mmo_batched, mmo_reference
 from repro.core.closure import (
+    batched_bellman_ford_closure,
+    batched_leyzorek_closure,
     bellman_ford_closure,
+    closure_pad_values,
     floyd_warshall,
     leyzorek_closure,
+    pad_adjacency,
     prepare_adjacency,
 )
 
@@ -12,10 +17,16 @@ __all__ = [
     "ALL_OPS",
     "Semiring",
     "get_semiring",
+    "contraction_pads",
     "mmo",
+    "mmo_batched",
     "mmo_reference",
     "leyzorek_closure",
     "bellman_ford_closure",
+    "batched_leyzorek_closure",
+    "batched_bellman_ford_closure",
     "floyd_warshall",
     "prepare_adjacency",
+    "pad_adjacency",
+    "closure_pad_values",
 ]

@@ -23,6 +23,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mmo import mmo as _mmo
 from repro.core import semiring as sr_mod
@@ -120,6 +121,81 @@ def bellman_ford_closure(adj: Array,
   return out, i
 
 
+# ---------------------------------------------------------------------------
+# Batched closures — the serving engine's entry points.  One compiled program
+# closes a whole (R, n, n) stack of same-bucket problems; a per-request
+# convergence mask freezes finished problems (their rows stop changing and
+# their iteration counters stop) while stragglers keep iterating, so the
+# batch runs to max(iters_r) instead of R·mean(iters).
+# ---------------------------------------------------------------------------
+
+
+def _batched_changed(new: Array, old: Array) -> Array:
+  """(R, n, n) × (R, n, n) → (R,) per-request changed flags."""
+  return jax.vmap(_changed)(new, old)
+
+
+def _batched_fixpoint(adj: Array, step_fn, max_iters: int):
+  """Iterate ``c ← step_fn(c)`` per-request-masked until all converge."""
+  r = adj.shape[0]
+
+  def cond(state):
+    _, active, _, i = state
+    return jnp.any(active) & (i < max_iters)
+
+  def body(state):
+    c, active, iters, i = state
+    new = step_fn(c)
+    # freeze converged requests so their results (and counters) stop moving
+    new = jnp.where(active[:, None, None], new, c)
+    changed = _batched_changed(new, c)
+    iters = iters + active.astype(jnp.int32)
+    return new, active & changed, iters, i + 1
+
+  state0 = (adj, jnp.ones((r,), jnp.bool_), jnp.zeros((r,), jnp.int32),
+            jnp.asarray(0, jnp.int32))
+  out, _, iters, _ = jax.lax.while_loop(cond, body, state0)
+  return out, iters
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "max_iters", "mmo_fn"))
+def batched_leyzorek_closure(adj: Array,
+                             *,
+                             op: str,
+                             max_iters: Optional[int] = None,
+                             backend: str = "auto",
+                             mmo_fn: Optional[Callable] = None):
+  """Repeated squaring over a (R, n, n) request stack.
+
+  Returns (closure (R, n, n), per-request iteration counts (R,)).
+  """
+  if adj.ndim < 3:
+    raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
+  n = adj.shape[-1]
+  iters = max_iters if max_iters is not None else max(
+      1, math.ceil(math.log2(max(n, 2))))
+  f = mmo_fn or _default_mmo
+  return _batched_fixpoint(adj, lambda c: f(c, c, c, op, backend), iters)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "max_iters", "mmo_fn"))
+def batched_bellman_ford_closure(adj: Array,
+                                 *,
+                                 op: str,
+                                 max_iters: Optional[int] = None,
+                                 backend: str = "auto",
+                                 mmo_fn: Optional[Callable] = None):
+  """All-pairs Bellman-Ford D ← D ⊕ (D ⊗ A) over a (R, n, n) request stack."""
+  if adj.ndim < 3:
+    raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
+  n = adj.shape[-1]
+  iters = max_iters if max_iters is not None else n
+  f = mmo_fn or _default_mmo
+  return _batched_fixpoint(adj, lambda d: f(d, adj, d, op, backend), iters)
+
+
 @functools.partial(jax.jit, static_argnames=("op",))
 def floyd_warshall(adj: Array, *, op: str) -> Array:
   """Classic k-pivot closure (rank-1 ⊕-updates); the paper's CUDA-FW baseline
@@ -137,6 +213,66 @@ def floyd_warshall(adj: Array, *, op: str) -> Array:
   return jax.lax.fori_loop(0, n, body, adj)
 
 
+# Per-ring adjacency conventions: ``self`` is the ⊗-identity-ish self
+# distance on the diagonal, ``missing`` the no-edge sentinel.  ``missing`` is
+# deliberately the *graph* sentinel (0 for maxmul/maxmin capacities), not the
+# ⊕-identity: identity-padding a mul-ring adjacency would put −inf next to 0
+# weights and manufacture NaNs in ⊗.
+_SELF_VALUES = {
+    "minplus": 0.0, "maxplus": 0.0,
+    "minmul": 1.0, "maxmul": 1.0,
+    "minmax": float("-inf"), "maxmin": float("inf"),
+    "orand": 1.0, "mma": 0.0, "addnorm": 0.0,
+}
+
+_MISSING_VALUES = {
+    "minplus": float("inf"), "maxplus": float("-inf"),
+    "minmul": float("inf"), "maxmul": 0.0,
+    "minmax": float("inf"), "maxmin": 0.0,
+    "orand": 0.0, "mma": 0.0, "addnorm": 0.0,
+}
+
+
+def closure_pad_values(op) -> tuple:
+  """(missing, self) values for growing an adjacency matrix of ring ``op``.
+
+  Padding a prepared adjacency to (nb, nb) with ``missing`` everywhere and
+  ``self`` on the new diagonal adds isolated vertices, so the closure of the
+  padded matrix restricted to the original block equals the original closure
+  — the invariant the serving layer's shape bucketing relies on.
+  """
+  sr = sr_mod.get(op)
+  return _MISSING_VALUES[sr.name], _SELF_VALUES[sr.name]
+
+
+def pad_adjacency(adj, nb: int, *, op: str) -> np.ndarray:
+  """Embed a prepared (n, n) adjacency into (nb, nb) as isolated vertices.
+
+  Host-side (numpy) utility — the serving micro-batcher calls it per request
+  on the submit path, so it must not pay jax dispatch.  Returns numpy; wrap
+  in ``jnp.asarray`` for device use.
+  """
+  sr = sr_mod.get(op)
+  adj = np.asarray(adj)
+  n = adj.shape[-1]
+  if nb == n:
+    return adj
+  if nb < n:
+    raise ValueError(f"cannot pad {n}→{nb}")
+  missing, self_value = closure_pad_values(op)
+  if sr.boolean:
+    out = np.zeros(adj.shape[:-2] + (nb, nb), dtype=bool)
+    out[..., :n, :n] = adj
+    diag = np.arange(n, nb)
+    out[..., diag, diag] = True
+    return out
+  out = np.full(adj.shape[:-2] + (nb, nb), missing, dtype=adj.dtype)
+  out[..., :n, :n] = adj
+  diag = np.arange(n, nb)
+  out[..., diag, diag] = np.asarray(self_value, adj.dtype)
+  return out
+
+
 def prepare_adjacency(weights: Array, *, op: str,
                       self_value: Optional[float] = None) -> Array:
   """Fill the diagonal with the ⊗-identity-ish self distance for the ring
@@ -145,12 +281,7 @@ def prepare_adjacency(weights: Array, *, op: str,
   sr = sr_mod.get(op)
   n = weights.shape[-1]
   if self_value is None:
-    self_value = {
-        "minplus": 0.0, "maxplus": 0.0,
-        "minmul": 1.0, "maxmul": 1.0,
-        "minmax": float("-inf"), "maxmin": float("inf"),
-        "orand": 1.0, "mma": 0.0, "addnorm": 0.0,
-    }[sr.name]
+    self_value = _SELF_VALUES[sr.name]
   eye = jnp.eye(n, dtype=bool)
   if sr.boolean:
     return jnp.where(eye, True, weights.astype(jnp.bool_))

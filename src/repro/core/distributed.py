@@ -36,8 +36,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.mmo import mmo as _mmo
 from repro.core import semiring as sr_mod
 
-shard_map = jax.shard_map if hasattr(jax, "shard_map") else (
-    jax.experimental.shard_map.shard_map)  # pragma: no cover
+if hasattr(jax, "shard_map"):
+  shard_map = jax.shard_map
+else:  # pragma: no cover — older jax keeps it under experimental
+  from jax.experimental.shard_map import shard_map
+
+# jax.lax.pvary only exists on newer jax (varying-axis annotations for
+# shard_map rep-checking); older versions don't need the annotation.
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 Array = jax.Array
 
@@ -125,7 +131,7 @@ def ring_mmo(a: Array, b: Array, c: Optional[Array], *, op: str, mesh: Mesh,
 
     m = a_blk.shape[0]
     acc0 = sr.identity_like((m, n_cols), sr.acc_dtype(a_blk.dtype))
-    acc0 = jax.lax.pvary(acc0, (axis,))
+    acc0 = pvary(acc0, (axis,))
     _, acc = jax.lax.fori_loop(0, n_dev, step, (b_blk, acc0))
     if c_blk is not None:
       acc = sr.oplus(acc, c_blk.astype(acc.dtype))

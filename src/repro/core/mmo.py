@@ -158,6 +158,35 @@ def mmo(a: Array,
   return out
 
 
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "block_k", "interpret"))
+def mmo_batched(a: Array,
+                b: Array,
+                c: Optional[Array] = None,
+                *,
+                op="mma",
+                backend: str = "auto",
+                block_k: int = _DEFAULT_BLOCK_K,
+                interpret: Optional[bool] = None) -> Array:
+  """D[r] = C[r] ⊕ (A[r] ⊗ B[r]) over a leading request axis.
+
+  The serving engine's raw-mmo entry point: one compiled program per
+  (bucket_shape, op, dtype, backend) executes a whole padded request batch.
+  Every backend accepts the leading axis ('vector'/'xla' natively, 'pallas'
+  via the batch vmap in kernels/ops.py); this wrapper pins the contract and
+  validates that all operands agree on the request count.
+  """
+  if a.ndim < 3 or b.ndim < 3:
+    raise ValueError(f"mmo_batched needs (R, M, K)/(R, K, N), got "
+                     f"{a.shape} {b.shape}")
+  if a.shape[0] != b.shape[0] or (c is not None and c.shape[0] != a.shape[0]):
+    raise ValueError(
+        f"request-axis mismatch: {a.shape} {b.shape}"
+        f"{'' if c is None else f' {c.shape}'}")
+  return mmo(a, b, c, op=op, backend=backend, block_k=block_k,
+             interpret=interpret)
+
+
 def mmo_reference(a, b, c=None, *, op="mma"):
   """Unblocked O(MKN)-memory oracle (tests only)."""
   sr = sr_mod.get(op)

@@ -228,3 +228,29 @@ def oplus_reduce(sr, x: Array, axis: int) -> Array:
   if sr.oplus is jnp.maximum:
     return jnp.max(x, axis=axis)
   raise NotImplementedError(sr.name)
+
+
+# ---------------------------------------------------------------------------
+# K-padding values.  Padding the contraction dimension of A with ``pa`` and
+# of B with ``pb`` is an algebraic no-op because ⊗(pa, pb) == the ⊕-identity
+# (and never NaN: e.g. maxmul uses (−inf, +inf) so the product is −inf, not
+# the −inf·−inf = +inf a naive identity-pad would give).  Shared by the
+# Pallas kernel's K-tail handling and the serving layer's shape bucketing.
+# ---------------------------------------------------------------------------
+
+_CONTRACTION_PADS = {
+    "mma": (0.0, 0.0),
+    "minplus": (float("inf"), float("inf")),
+    "maxplus": (float("-inf"), float("-inf")),
+    "minmul": (float("inf"), float("inf")),
+    "maxmul": (float("-inf"), float("inf")),
+    "minmax": (float("inf"), float("inf")),
+    "maxmin": (float("-inf"), float("-inf")),
+    "orand": (0.0, 0.0),
+    "addnorm": (0.0, 0.0),
+}
+
+
+def contraction_pads(sr) -> tuple:
+  """(pad_a, pad_b) for K-axis padding with ⊗(pad_a, pad_b) == ⊕-identity."""
+  return _CONTRACTION_PADS[get(sr).name]

@@ -34,18 +34,14 @@ from repro.core import semiring as sr_mod
 
 Array = jax.Array
 
-# (pad_a, pad_b) per op with ⊗(pad_a, pad_b) == ⊕-identity (K-tail padding).
-_PADS = {
-    "mma": (0.0, 0.0),
-    "minplus": (float("inf"), float("inf")),
-    "maxplus": (float("-inf"), float("-inf")),
-    "minmul": (float("inf"), float("inf")),
-    "maxmul": (float("-inf"), float("inf")),
-    "minmax": (float("inf"), float("inf")),
-    "maxmin": (float("-inf"), float("-inf")),
-    "orand": (0.0, 0.0),
-    "addnorm": (0.0, 0.0),
-}
+# jax renamed TPUCompilerParams → CompilerParams across 0.4.x/0.5.x releases.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+# (pad_a, pad_b) per op with ⊗(pad_a, pad_b) == ⊕-identity (K-tail padding);
+# the table lives in core/semiring.py so the serving layer's shape bucketing
+# shares the exact same padding algebra.
+_PADS = sr_mod._CONTRACTION_PADS
 
 _SUBLANES = 8  # VPU sublane count — rank-u update width.
 
@@ -191,7 +187,7 @@ def semiring_mmo(a: Array,
       in_specs=in_specs,
       out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
       out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
-      compiler_params=pltpu.CompilerParams(
+      compiler_params=_CompilerParams(
           dimension_semantics=("parallel", "parallel", "arbitrary")),
       interpret=interpret,
       name=f"simd2_{sr.name}",

@@ -139,6 +139,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, **kw) -> dict:
 
   mem = compiled.memory_analysis()
   cost = compiled.cost_analysis()
+  # older jax returns a per-device list of cost dicts, newer a single dict
+  if isinstance(cost, (list, tuple)):
+    cost = cost[0] if cost else {}
   hlo = compiled.as_text()
   # Loop-corrected per-device costs from the compiled artifact (XLA's own
   # cost_analysis counts while bodies once — see roofline/hlo_walk.py).

@@ -21,7 +21,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-shard_map = jax.shard_map
+if hasattr(jax, "shard_map"):
+  shard_map = jax.shard_map
+else:  # pragma: no cover — older jax keeps it under experimental
+  from jax.experimental.shard_map import shard_map
+
+# jax.lax.pvary only exists on newer jax (varying-axis annotations for
+# shard_map rep-checking); older versions don't need the annotation.
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 Array = jax.Array
 
@@ -54,8 +61,8 @@ def pipeline(stage_fn: Callable, mesh: Mesh, *, axis: str = "stage",
     m = xs.shape[0]
     t_total = m + n_stage - 1
     zero = jnp.zeros_like(xs[0])
-    outs0 = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
-    buf0 = jax.lax.pvary(zero, (axis,))
+    outs0 = pvary(jnp.zeros_like(xs), (axis,))
+    buf0 = pvary(zero, (axis,))
 
     def tick(t, carry):
       buf, outs = carry

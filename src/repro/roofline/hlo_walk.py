@@ -102,8 +102,10 @@ class HloModule:
       if not mo:
         continue
       name, out_type, kind, operand_str, tail = mo.groups()
-      operands = [o.strip().lstrip("%") for o in operand_str.split(",")
-                  if o.strip().startswith("%")]
+      # Operands print either bare (`dot(%a, %b)`) or typed
+      # (`dot(f32[8,8]{1,0} %a, …)`) depending on the XLA version; pull the
+      # %names out directly so both forms parse.
+      operands = re.findall(r"%([\w\.\-]+)", operand_str)
       self.comps[cur].append(_Op(name, out_type, kind, operands, tail))
 
   # -- per-op costing --------------------------------------------------------

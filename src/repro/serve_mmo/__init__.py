@@ -1,0 +1,51 @@
+"""MMO serving engine — shape-bucketed continuous batching for semiring
+workloads.
+
+The paper's eight SIMD² applications are all *small-matrix, high-rate*
+problems (a routing query, a KNN lookup, a reachability probe), which makes
+them serving workloads, not one-shot library calls.  This package turns the
+``core.mmo`` / ``core.closure`` stack into a request-driven service:
+
+  api.py        — problem requests (apsp / knn / reachability / raw mmo)
+                  and result futures,
+  scheduler.py  — FIFO request queue bucketed by (kind, op, padded shape,
+                  dtype, static params),
+  batching.py   — pad-and-stack micro-batcher: one compiled program per
+                  bucket executes a whole request batch (per-request
+                  convergence masks for closures),
+  cache.py      — AOT executable cache keyed by (bucket, batch, backend) so
+                  steady-state traffic never retraces,
+  engine.py     — the engine: submit()/futures, synchronous step() or a
+                  background serving loop, per-request latency stats.
+
+Quickstart::
+
+    from repro.serve_mmo import MMOEngine, apsp_request, knn_request
+
+    eng = MMOEngine(backend="xla", max_batch=8)
+    futs = [eng.submit(apsp_request(w)) for w in weight_matrices]
+    eng.run_until_idle()
+    dist = futs[0].result().value
+"""
+from repro.serve_mmo.api import (ProblemRequest, MMOFuture, MMOResult,
+                                 apsp_request, closure_request, knn_request,
+                                 mmo_request, reachability_request)
+from repro.serve_mmo.cache import ExecutableCache
+from repro.serve_mmo.engine import EngineStats, MMOEngine
+from repro.serve_mmo.scheduler import BucketKey, FifoBucketScheduler
+
+__all__ = [
+    "ProblemRequest",
+    "MMOFuture",
+    "MMOResult",
+    "MMOEngine",
+    "EngineStats",
+    "ExecutableCache",
+    "BucketKey",
+    "FifoBucketScheduler",
+    "mmo_request",
+    "closure_request",
+    "apsp_request",
+    "reachability_request",
+    "knn_request",
+]

@@ -1,0 +1,179 @@
+"""Pad-and-stack micro-batcher: bucket → one compiled program.
+
+Three pieces per bucket:
+
+  ``stack_batch``    — host-side: pad every request's operands to the bucket
+                       shape and stack along a new leading request axis.
+                       Padding is algebra-aware so it is a semantic no-op:
+                       K-axis pads use core.semiring.contraction_pads (⊗ of
+                       pads == ⊕-identity), adjacency pads add isolated
+                       vertices (core.closure.closure_pad_values), and KNN
+                       batches carry a per-request valid-row count so padded
+                       corpus rows are masked to +inf before top-k (data-
+                       scale independent — no magic far-away sentinel).
+  ``make_batch_fn``  — the pure jax function the executable cache compiles:
+                       mmo_batched / batched_*_closure (per-request
+                       convergence masks) / addnorm+top-k.
+  ``split_results``  — slice the padded batch output back to each request's
+                       true shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import closure as cl_mod
+from repro.core import semiring as sr_mod
+from repro.core.mmo import mmo_batched
+from repro.serve_mmo.api import MMOResult, ProblemRequest
+from repro.serve_mmo.scheduler import BucketKey
+
+def _pad2d(x: np.ndarray, rows: int, cols: int,
+           row_val, col_val) -> np.ndarray:
+  """Pad a 2-D array to (rows, cols); new rows get row_val, new cols col_val."""
+  out = np.full((rows, cols), col_val, dtype=x.dtype)
+  out[x.shape[0]:, :] = row_val
+  out[:x.shape[0], :x.shape[1]] = x
+  return out
+
+
+def _stack_mmo(key: BucketKey, reqs: Sequence[ProblemRequest]):
+  mb, kb, nb = key.shape
+  pa, pb = sr_mod.contraction_pads(key.op)
+  boolean = sr_mod.get(key.op).boolean
+  if boolean:
+    pa = pb = False
+  (has_c,) = key.params
+  a = np.stack([_pad2d(r.arrays["a"], mb, kb, pa, pa) for r in reqs])
+  b = np.stack([_pad2d(r.arrays["b"], kb, nb, pb, pb) for r in reqs])
+  if not has_c:
+    return (a, b)
+  ident = False if boolean else sr_mod.get(key.op).oplus_identity
+  c = np.stack([_pad2d(r.arrays["c"], mb, nb, ident, ident) for r in reqs])
+  return (a, b, c)
+
+
+def _stack_closure(key: BucketKey, reqs: Sequence[ProblemRequest]):
+  (nb,) = key.shape
+  return (np.stack([cl_mod.pad_adjacency(r.arrays["adj"], nb, op=key.op)
+                    for r in reqs]),)
+
+
+def _stack_knn(key: BucketKey, reqs: Sequence[ProblemRequest]):
+  qb, rb, db = key.shape
+  # all pads are zeros (query pad rows' outputs are sliced away; padded dims
+  # contribute (0-0)²=0 for real rows); ``valid`` carries each request's true
+  # corpus size so the compiled program can mask padded rows out of top-k.
+  q = np.stack([_pad2d(r.arrays["queries"], qb, db, 0.0, 0.0) for r in reqs])
+  ref = np.stack([_pad2d(r.arrays["corpus"], rb, db, 0.0, 0.0) for r in reqs])
+  valid = np.asarray([r.arrays["corpus"].shape[0] for r in reqs], np.int32)
+  return (q, ref, valid)
+
+
+def stack_batch(key: BucketKey, reqs: Sequence[ProblemRequest]):
+  """Pad + stack all request operands for one bucket batch."""
+  if key.kind == "mmo":
+    return _stack_mmo(key, reqs)
+  if key.kind == "closure":
+    return _stack_closure(key, reqs)
+  if key.kind == "knn":
+    return _stack_knn(key, reqs)
+  raise ValueError(f"unknown kind {key.kind!r}")
+
+
+def abstract_batch(key: BucketKey, batch: int):
+  """ShapeDtypeStructs matching ``stack_batch``'s output for ``batch``
+  requests — lets prewarm compile executables without materializing data."""
+  if key.kind == "mmo":
+    mb, kb, nb = key.shape
+    (has_c,) = key.params
+    shapes = [(batch, mb, kb), (batch, kb, nb)]
+    if has_c:
+      shapes.append((batch, mb, nb))
+    return tuple(jax.ShapeDtypeStruct(s, np.dtype(dt))
+                 for s, dt in zip(shapes, key.dtypes))
+  if key.kind == "closure":
+    (nb,) = key.shape
+    return (jax.ShapeDtypeStruct((batch, nb, nb), np.dtype(key.dtypes[0])),)
+  if key.kind == "knn":
+    qb, rb, db = key.shape
+    return (jax.ShapeDtypeStruct((batch, qb, db), np.dtype(key.dtypes[0])),
+            jax.ShapeDtypeStruct((batch, rb, db), np.dtype(key.dtypes[1])),
+            jax.ShapeDtypeStruct((batch,), np.dtype(np.int32)))
+  raise ValueError(f"unknown kind {key.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# compiled-program construction
+# ---------------------------------------------------------------------------
+
+
+def make_batch_fn(key: BucketKey, *, backend: str,
+                  interpret: Optional[bool] = None):
+  """Pure jax function over the stacked operands for one bucket."""
+  if key.kind == "mmo":
+    (has_c,) = key.params
+
+    def fn(*args):
+      a, b = args[0], args[1]
+      c = args[2] if has_c else None
+      return mmo_batched(a, b, c, op=key.op, backend=backend,
+                         interpret=interpret)
+
+    return fn
+
+  if key.kind == "closure":
+    (algorithm,) = key.params
+    solver = (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
+              else cl_mod.batched_bellman_ford_closure)
+
+    def mmo_fn(a, b, c, op, bk):
+      from repro.core.mmo import mmo as _mmo
+      return _mmo(a, b, c, op=op, backend=bk, interpret=interpret)
+
+    return functools.partial(solver, op=key.op, backend=backend,
+                             mmo_fn=mmo_fn)
+
+  if key.kind == "knn":
+    (k,) = key.params
+
+    def fn(q, ref, valid):
+      d2 = mmo_batched(q, jnp.swapaxes(ref, -1, -2), op="addnorm",
+                       backend=backend, interpret=interpret)
+      # mask padded corpus rows to +inf so they lose every top-k comparison
+      row_ok = jnp.arange(d2.shape[-1]) < valid[:, None]  # (R, rb)
+      d2 = jnp.where(row_ok[:, None, :], d2, jnp.inf)
+      neg, idx = jax.lax.top_k(-d2, k)
+      return -neg, idx
+
+    return fn
+
+  raise ValueError(f"unknown kind {key.kind!r}")
+
+
+def split_results(key: BucketKey, reqs: Sequence[ProblemRequest], out):
+  """Batched program output → per-request MMOResults at true shapes."""
+  results = []
+  if key.kind == "mmo":
+    d = np.asarray(out)
+    for i, r in enumerate(reqs):
+      m, _, n = r.shape
+      results.append(MMOResult(value=d[i, :m, :n]))
+  elif key.kind == "closure":
+    closed, iters = (np.asarray(out[0]), np.asarray(out[1]))
+    for i, r in enumerate(reqs):
+      (n,) = r.shape
+      results.append(MMOResult(value=closed[i, :n, :n],
+                               extras={"iterations": int(iters[i])}))
+  elif key.kind == "knn":
+    d2, idx = np.asarray(out[0]), np.asarray(out[1])
+    for i, r in enumerate(reqs):
+      q = r.shape[0]
+      results.append(MMOResult(value=d2[i, :q], extras={"indices": idx[i, :q]}))
+  else:
+    raise ValueError(f"unknown kind {key.kind!r}")
+  return results

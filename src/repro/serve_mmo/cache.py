@@ -1,0 +1,71 @@
+"""AOT executable cache — steady-state traffic never retraces.
+
+Programs are compiled ahead-of-time (``jax.jit(fn).lower(shapes).compile()``)
+and keyed by (BucketKey, batch size, backend): the engine asks the cache
+before every batch, so after warmup every bucket's traffic replays a stored
+executable and the hit/miss counters *prove* zero recompiles (asserted in
+benchmarks/serve_bench.py).  Batch sizes are part of the key; the scheduler's
+max_batch bounds how many variants one bucket can create.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class CacheEntry:
+  compiled: Callable
+  compile_s: float
+  hits: int = 0
+
+
+class ExecutableCache:
+  def __init__(self):
+    self._entries: dict = {}
+    self.misses = 0
+
+  @property
+  def hits(self) -> int:
+    return sum(e.hits for e in self._entries.values())
+
+  @property
+  def compiles(self) -> int:
+    return self.misses
+
+  @property
+  def compile_s(self) -> float:
+    return sum(e.compile_s for e in self._entries.values())
+
+  def __len__(self) -> int:
+    return len(self._entries)
+
+  def get_or_compile(self, exec_key, make_fn: Callable, args) -> Callable:
+    """Return the compiled program for ``exec_key``, compiling on first use.
+
+    ``make_fn`` builds the pure function; ``args`` are example (or abstract)
+    operands fixing shapes/dtypes.
+    """
+    entry = self._entries.get(exec_key)
+    if entry is not None:
+      entry.hits += 1
+      return entry.compiled
+    self.misses += 1
+    t0 = time.perf_counter()
+    abstract = tuple(
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
+    compiled = jax.jit(make_fn()).lower(*abstract).compile()
+    self._entries[exec_key] = CacheEntry(
+        compiled=compiled, compile_s=time.perf_counter() - t0)
+    return compiled
+
+  def stats(self) -> dict:
+    return {
+        "executables": len(self),
+        "hits": self.hits,
+        "misses": self.misses,
+        "compile_s": round(self.compile_s, 3),
+    }

