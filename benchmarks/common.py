@@ -30,21 +30,19 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
   return best
 
 
-_PORT_HAZARD = {"minmax": 2.0, "maxmin": 2.0, "orand": 2.0}
-
-
 def modeled_speedup(op: str, m: int, k: int, n: int,
                     dtype_bytes: int = 2) -> float:
   """v5e model: SIMD²-unit arm runs the ⊕⊗-contraction at MXU-class
   throughput; the vector arm runs it on the VPU (peak/16) with a structural
-  port hazard for fused min/max / or/and pairs.  Both arms pay the same HBM
-  traffic, so the ratio is evaluated at the roofline knee."""
+  port hazard for fused min/max / or/and pairs (hw.vpu_hazard — shared with
+  the dispatch cost prior).  Both arms pay the same HBM traffic, so the
+  ratio is evaluated at the roofline knee."""
   flops = 2.0 * m * k * n
   bytes_ = dtype_bytes * (m * k + k * n + 4 * m * n)
   t_mem = bytes_ / hw.HBM_BW
   t_unit = max(flops / hw.PEAK_FLOPS_BF16, t_mem)
-  hazard = _PORT_HAZARD.get(op, 1.0)
-  t_vpu = max(flops * hazard / (hw.PEAK_FLOPS_BF16 * hw.VPU_RATIO), t_mem)
+  t_vpu = max(flops * hw.vpu_hazard(op) / (hw.PEAK_FLOPS_BF16 * hw.VPU_RATIO),
+              t_mem)
   return t_vpu / t_unit
 
 

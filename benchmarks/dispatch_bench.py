@@ -1,0 +1,186 @@
+"""Dispatch benchmark: measured cost-table auto-dispatch vs fixed backends.
+
+    PYTHONPATH=src python benchmarks/dispatch_bench.py [--out BENCH_dispatch.json]
+
+Two experiments, results persisted to a JSON perf-trajectory artifact:
+
+  dispatch — per op family, wall time of a small shape sweep under each
+             *fixed* backend vs ``backend="auto"`` driven by a cost table
+             measured on this very device moments earlier.  Auto must hold a
+             ≥1.2× geomean over the worst fixed backend: that is the whole
+             point of dispatch — no single backend is safe to pin across op
+             families (the MXU rewrites crush 'vector' on mma/addnorm/orand;
+             the min/max rings don't care).
+  ragged   — one mixed-size closure bucket (line graphs iterate ~n times,
+             the big dense graph converges almost immediately), padded vs
+             ragged masked-K execution (per-request ``valid_n`` + converged
+             requests dropping to k_valid=0).  Ragged must beat padded:
+             after the big request converges, every surviving iteration
+             contracts ~ceil(n_straggler/bk) K-blocks instead of the full
+             padded bucket.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import gmean, timeit
+from repro.core.closure import (batched_bellman_ford_closure,
+                                pad_adjacency, prepare_adjacency)
+from repro.core.mmo import mmo
+from repro.tuning import tune, use_cost_table
+
+# One representative shape pair per op family: big enough that backend choice
+# matters, small enough for a CPU host.
+FAMILY_SHAPES = ((128, 128, 128), (64, 256, 64))
+FAMILIES = ("mma", "addnorm", "orand", "minplus", "maxmin")
+
+
+def _operands(op, shape, seed=0):
+  from repro.tuning.autotune import _operands as _tune_operands
+  a, b = _tune_operands(op, shape, "float32", seed=seed)
+  return jnp.asarray(a), jnp.asarray(b)
+
+
+def bench_dispatch(backends, *, iters=3):
+  """{family: {fixed: {backend: s}, auto: s, worst_fixed: s, speedups}}."""
+  table = tune(ops=FAMILIES, shapes=FAMILY_SHAPES, backends=backends,
+               iters=iters)
+  out = {}
+  for op in FAMILIES:
+    arms = {}
+    for backend in backends:
+      arms[backend] = sum(
+          timeit(lambda a=a, b=b, bk=backend: mmo(a, b, op=op, backend=bk),
+                 iters=iters)
+          for a, b in (_operands(op, s) for s in FAMILY_SHAPES))
+    with use_cost_table(table):
+      auto = sum(
+          timeit(lambda a=a, b=b: mmo(a, b, op=op, backend="auto"),
+                 iters=iters)
+          for a, b in (_operands(op, s) for s in FAMILY_SHAPES))
+    worst = max(arms.values())
+    out[op] = {
+        "fixed_s": arms,
+        "auto_s": auto,
+        "worst_fixed_s": worst,
+        "speedup_vs_worst_fixed": worst / auto,
+        "speedup_vs_best_fixed": min(arms.values()) / auto,
+    }
+  return out
+
+
+def _line_graph(n, seed=0):
+  """Path graph i→i+1: diameter n−1, so Bellman-Ford iterates ~n times —
+  the straggler that keeps a mixed bucket alive."""
+  rng = np.random.default_rng(seed)
+  w = np.full((n, n), np.inf, np.float32)
+  w[np.arange(n - 1), np.arange(1, n)] = rng.uniform(
+      0.5, 1.5, n - 1).astype(np.float32)
+  return w
+
+
+def _dense_graph(n, seed=0):
+  """Dense random digraph: tiny diameter, converges in a few iterations."""
+  rng = np.random.default_rng(seed)
+  w = rng.uniform(0.5, 1.5, (n, n)).astype(np.float32)
+  w[rng.random((n, n)) > 0.5] = np.inf
+  return w
+
+
+def bench_ragged(*, nb=128, stragglers=(65, 66, 68, 70, 72, 74, 76),
+                 iters=3):
+  """Padded vs ragged masked-K on one mixed-size closure bucket."""
+  sizes = list(stragglers) + [nb]
+  ws = [_line_graph(n, seed=n) for n in stragglers] + [_dense_graph(nb)]
+  prepared = [prepare_adjacency(jnp.asarray(w), op="minplus") for w in ws]
+  stack = jnp.stack([pad_adjacency(p, nb, op="minplus") for p in prepared])
+  valid = jnp.asarray(sizes, jnp.int32)
+
+  padded_s = timeit(
+      lambda: batched_bellman_ford_closure(stack, op="minplus",
+                                           backend="xla")[0], iters=iters)
+  ragged_s = timeit(
+      lambda: batched_bellman_ford_closure(stack, op="minplus", backend="xla",
+                                           valid_n=valid)[0], iters=iters)
+  # parity: skipping dead K-blocks must not move the fixpoint
+  out_p, it_p = batched_bellman_ford_closure(stack, op="minplus",
+                                             backend="xla")
+  out_r, it_r = batched_bellman_ford_closure(stack, op="minplus",
+                                             backend="xla", valid_n=valid)
+  np.testing.assert_allclose(np.asarray(out_r), np.asarray(out_p), atol=1e-5)
+  return {
+      "bucket": nb,
+      "sizes": sizes,
+      "iterations": np.asarray(it_r).tolist(),
+      "padded_s": padded_s,
+      "ragged_s": ragged_s,
+      "speedup": padded_s / ragged_s,
+  }
+
+
+def main(argv=None):
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--out", default="BENCH_dispatch.json")
+  ap.add_argument("--iters", type=int, default=3)
+  ap.add_argument("--backends", default=None,
+                  help="comma-separated fixed arms (default: xla,vector "
+                       "plus pallas on TPU)")
+  args = ap.parse_args(argv)
+
+  if args.backends:
+    backends = tuple(args.backends.split(","))
+  else:
+    # pallas-interpret on CPU is an emulation arm, not a serving option —
+    # only sweep fixed backends this host can actually serve with
+    from repro.tuning.autotune import default_backends
+    backends = default_backends()
+
+  dispatch = bench_dispatch(backends, iters=args.iters)
+  for op, row in dispatch.items():
+    fixed = "  ".join(f"{b}={s * 1e3:7.2f}ms" for b, s in
+                      row["fixed_s"].items())
+    print(f"[dispatch_bench] {op:8s} {fixed}  auto={row['auto_s'] * 1e3:7.2f}ms"
+          f"  vs_worst={row['speedup_vs_worst_fixed']:5.2f}x"
+          f"  vs_best={row['speedup_vs_best_fixed']:5.2f}x")
+  geo_worst = gmean(r["speedup_vs_worst_fixed"] for r in dispatch.values())
+  geo_best = gmean(r["speedup_vs_best_fixed"] for r in dispatch.values())
+  print(f"[dispatch_bench] auto-dispatch geomean: {geo_worst:.2f}x vs worst "
+        f"fixed backend, {geo_best:.2f}x vs best fixed backend")
+
+  ragged = bench_ragged(iters=args.iters)
+  print(f"[dispatch_bench] ragged closure bucket={ragged['bucket']} "
+        f"sizes={ragged['sizes']}: padded={ragged['padded_s'] * 1e3:.1f}ms "
+        f"ragged={ragged['ragged_s'] * 1e3:.1f}ms "
+        f"({ragged['speedup']:.2f}x)")
+
+  doc = {
+      "schema": 1,
+      "device": f"{jax.default_backend()}",
+      "backends": list(backends),
+      "dispatch": dispatch,
+      "geomean_speedup_vs_worst_fixed": geo_worst,
+      "geomean_speedup_vs_best_fixed": geo_best,
+      "ragged": ragged,
+  }
+  with open(args.out, "w") as f:
+    json.dump(doc, f, indent=2)
+  print(f"[dispatch_bench] wrote {args.out}")
+
+  assert geo_worst >= 1.2, (
+      f"auto-dispatch must hold >=1.2x geomean over the worst fixed backend, "
+      f"got {geo_worst:.2f}x")
+  assert ragged["speedup"] > 1.0, (
+      f"ragged masked-K must beat padded on a mixed-size bucket, got "
+      f"{ragged['speedup']:.2f}x")
+  return 0
+
+
+if __name__ == "__main__":
+  raise SystemExit(main())

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
   Fig 10  microbench_shapes     Fig 13/14  sparse_bench
   Fig 11  apps_bench            Table 5 area_table
   §Roofline  roofline_table (from dry-run artifacts, if present)
+  §Dispatch  dispatch_bench (auto vs fixed backends → BENCH_dispatch.json)
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import traceback
 
 
 def main() -> None:
-  from benchmarks import (algo_opts, apps_bench, area_table,
+  from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
                           microbench_shapes, microbench_square,
                           roofline_table, sparse_bench)
   print("name,us_per_call,derived")
@@ -25,6 +26,7 @@ def main() -> None:
       ("fig13_14", sparse_bench.main),
       ("table5", area_table.main),
       ("roofline", roofline_table.main),
+      ("dispatch", dispatch_bench.main),
   )
   failed = []
   for name, fn in suites:

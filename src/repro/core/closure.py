@@ -31,8 +31,8 @@ from repro.core import semiring as sr_mod
 Array = jax.Array
 
 
-def _default_mmo(a, b, c, op, backend):
-  return _mmo(a, b, c, op=op, backend=backend)
+def _default_mmo(a, b, c, op, backend, k_valid=None):
+  return _mmo(a, b, c, op=op, backend=backend, k_valid=k_valid)
 
 
 def _changed(new: Array, old: Array) -> Array:
@@ -127,6 +127,14 @@ def bellman_ford_closure(adj: Array,
 # convergence mask freezes finished problems (their rows stop changing and
 # their iteration counters stop) while stragglers keep iterating, so the
 # batch runs to max(iters_r) instead of R·mean(iters).
+#
+# With ``valid_n`` (one true problem size per request), each step's mmo also
+# gets a per-request live-K count: rows/columns beyond a request's true n are
+# isolated-vertex padding whose contraction terms are ⊕-identity no-ops, so
+# the backends skip them (masked K-blocks in the Pallas kernel, a dynamic
+# K-block trip count in the vector path).  Converged requests are handed
+# k_valid=0 — their step output is discarded by the freeze anyway — so
+# finished problems stop paying contraction work, not just the jnp.where.
 # ---------------------------------------------------------------------------
 
 
@@ -135,9 +143,12 @@ def _batched_changed(new: Array, old: Array) -> Array:
   return jax.vmap(_changed)(new, old)
 
 
-def _batched_fixpoint(adj: Array, step_fn, max_iters: int):
-  """Iterate ``c ← step_fn(c)`` per-request-masked until all converge."""
+def _batched_fixpoint(adj: Array, step_fn, max_iters: int,
+                      valid_n: Optional[Array] = None):
+  """Iterate ``c ← step_fn(c, k_valid)`` per-request-masked to convergence."""
   r = adj.shape[0]
+  if valid_n is not None:
+    valid_n = jnp.asarray(valid_n, jnp.int32)
 
   def cond(state):
     _, active, _, i = state
@@ -145,7 +156,8 @@ def _batched_fixpoint(adj: Array, step_fn, max_iters: int):
 
   def body(state):
     c, active, iters, i = state
-    new = step_fn(c)
+    kv = None if valid_n is None else jnp.where(active, valid_n, 0)
+    new = step_fn(c, kv)
     # freeze converged requests so their results (and counters) stop moving
     new = jnp.where(active[:, None, None], new, c)
     changed = _batched_changed(new, c)
@@ -165,10 +177,13 @@ def batched_leyzorek_closure(adj: Array,
                              op: str,
                              max_iters: Optional[int] = None,
                              backend: str = "auto",
-                             mmo_fn: Optional[Callable] = None):
+                             mmo_fn: Optional[Callable] = None,
+                             valid_n: Optional[Array] = None):
   """Repeated squaring over a (R, n, n) request stack.
 
-  Returns (closure (R, n, n), per-request iteration counts (R,)).
+  ``valid_n`` (R,) carries each request's true problem size for ragged
+  masked-K work skipping.  Returns (closure (R, n, n), per-request iteration
+  counts (R,)).
   """
   if adj.ndim < 3:
     raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
@@ -176,7 +191,8 @@ def batched_leyzorek_closure(adj: Array,
   iters = max_iters if max_iters is not None else max(
       1, math.ceil(math.log2(max(n, 2))))
   f = mmo_fn or _default_mmo
-  return _batched_fixpoint(adj, lambda c: f(c, c, c, op, backend), iters)
+  return _batched_fixpoint(adj, lambda c, kv: f(c, c, c, op, backend, kv),
+                           iters, valid_n=valid_n)
 
 
 @functools.partial(
@@ -186,14 +202,19 @@ def batched_bellman_ford_closure(adj: Array,
                                  op: str,
                                  max_iters: Optional[int] = None,
                                  backend: str = "auto",
-                                 mmo_fn: Optional[Callable] = None):
-  """All-pairs Bellman-Ford D ← D ⊕ (D ⊗ A) over a (R, n, n) request stack."""
+                                 mmo_fn: Optional[Callable] = None,
+                                 valid_n: Optional[Array] = None):
+  """All-pairs Bellman-Ford D ← D ⊕ (D ⊗ A) over a (R, n, n) request stack.
+
+  ``valid_n`` (R,) enables ragged masked-K work skipping (see above).
+  """
   if adj.ndim < 3:
     raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
   n = adj.shape[-1]
   iters = max_iters if max_iters is not None else n
   f = mmo_fn or _default_mmo
-  return _batched_fixpoint(adj, lambda d: f(d, adj, d, op, backend), iters)
+  return _batched_fixpoint(adj, lambda d, kv: f(d, adj, d, op, backend, kv),
+                           iters, valid_n=valid_n)
 
 
 @functools.partial(jax.jit, static_argnames=("op",))

@@ -24,18 +24,35 @@ def _on_tpu() -> bool:
 
 def semiring_mmo(a: Array, b: Array, c: Optional[Array] = None, *,
                  op: str = "mma", bm: int = 128, bn: int = 128, bk: int = 128,
-                 interpret: Optional[bool] = None,
-                 faithful: bool = False) -> Array:
-  """Batched-aware Pallas MMO; vmaps leading batch dims onto the 2-D kernel."""
+                 interpret: Optional[bool] = None, faithful: bool = False,
+                 k_valid: Optional[Array] = None) -> Array:
+  """Batched-aware Pallas MMO; vmaps leading batch dims onto the 2-D kernel.
+
+  ``k_valid`` broadcasts over the batch dims (one live-K scalar per kernel
+  instance), so a (R, M, K) batch takes an (R,) vector of per-request K
+  counts — the ragged masked-K serving path.
+  """
   interp = (not _on_tpu()) if interpret is None else interpret
-  fn = functools.partial(_sm.semiring_mmo, op=op, bm=bm, bn=bn, bk=bk,
-                         interpret=interp, faithful=faithful)
-  nbatch = a.ndim - 2
-  for _ in range(nbatch):
+  kw = dict(op=op, bm=bm, bn=bn, bk=bk, interpret=interp, faithful=faithful)
+  has_c, has_kv = c is not None, k_valid is not None
+
+  def base(*ops_):
+    pos = 2
+    cc = ops_[pos] if has_c else None
+    pos += has_c
+    kv = ops_[pos] if has_kv else None
+    return _sm.semiring_mmo(ops_[0], ops_[1], cc, k_valid=kv, **kw)
+
+  operands = [a, b]
+  if has_c:
+    operands.append(c)
+  if has_kv:
+    operands.append(jnp.broadcast_to(jnp.asarray(k_valid, jnp.int32),
+                                     a.shape[:-2]))
+  fn = base
+  for _ in range(a.ndim - 2):
     fn = jax.vmap(fn)
-  if c is None:
-    return fn(a, b) if nbatch == 0 else fn(a, b)
-  return fn(a, b, c)
+  return fn(*operands)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -94,29 +94,41 @@ def _block_contract(sr: sr_mod.Semiring, a: Array, b: Array,
   return jax.lax.fori_loop(1, nsub, body, acc) if nsub > 1 else acc
 
 
-def _make_kernel(sr: sr_mod.Semiring, nk: int, acc_dtype, has_c: bool,
-                 faithful: bool = False):
+def _make_kernel(sr: sr_mod.Semiring, acc_dtype, has_c: bool, has_kv: bool,
+                 bk: int, faithful: bool = False):
   oplus, _ = _float_ring(sr)
 
   def kernel(*refs):
+    refs = list(refs)
+    a_ref, b_ref = refs[0], refs[1]
+    pos = 2
+    c_ref = None
     if has_c:
-      a_ref, b_ref, c_ref, o_ref = refs
-    else:
-      a_ref, b_ref, o_ref = refs
-      c_ref = None
+      c_ref, pos = refs[pos], pos + 1
+    kv_ref = None
+    if has_kv:
+      kv_ref, pos = refs[pos], pos + 1
+    o_ref = refs[pos]
     k = pl.program_id(2)
-
-    part = _block_contract(sr, a_ref[...], b_ref[...], acc_dtype, faithful)
 
     @pl.when(k == 0)
     def _init():
+      # K-block 0 always runs: it both initializes o_ref and covers the
+      # k_valid==0 case (a frozen request whose output the caller discards).
+      part = _block_contract(sr, a_ref[...], b_ref[...], acc_dtype, faithful)
       if c_ref is not None:
         o_ref[...] = oplus(part, c_ref[...].astype(acc_dtype))
       else:
         o_ref[...] = part
 
-    @pl.when(k != 0)
+    # Ragged masked-K skipping: a K-block whose first lane is at or beyond
+    # this request's k_valid holds only algebraic-no-op pad lanes, so the
+    # whole block contraction is dead work and is skipped.
+    live = (k != 0) if kv_ref is None else ((k != 0) & (k * bk < kv_ref[0, 0]))
+
+    @pl.when(live)
     def _acc():
+      part = _block_contract(sr, a_ref[...], b_ref[...], acc_dtype, faithful)
       o_ref[...] = oplus(o_ref[...], part)
 
   return kernel
@@ -141,8 +153,14 @@ def semiring_mmo(a: Array,
                  bn: int = 128,
                  bk: int = 128,
                  interpret: bool = False,
-                 faithful: bool = False) -> Array:
-  """Tiled Pallas D = C ⊕ (A ⊗ B) for 2-D operands (vmap for batching)."""
+                 faithful: bool = False,
+                 k_valid: Optional[Array] = None) -> Array:
+  """Tiled Pallas D = C ⊕ (A ⊗ B) for 2-D operands (vmap for batching).
+
+  ``k_valid`` (int32 scalar) marks how many leading K lanes are live; K
+  blocks at or beyond it are skipped entirely (the caller guarantees those
+  lanes are algebraic no-ops — contraction pads or isolated-vertex padding).
+  """
   sr = sr_mod.get(op)
   was_bool = sr.boolean
   in_dtype = a.dtype
@@ -169,8 +187,9 @@ def semiring_mmo(a: Array,
   if has_c:
     c_p = _pad_to(c.astype(acc_dtype), mp, np_, 0.0)
 
+  has_kv = k_valid is not None
   grid = (mp // bm_, np_ // bn_, kp // bk_)
-  kernel = _make_kernel(sr, grid[2], acc_dtype, has_c, faithful)
+  kernel = _make_kernel(sr, acc_dtype, has_c, has_kv, bk_, faithful)
 
   in_specs = [
       pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
@@ -180,6 +199,10 @@ def semiring_mmo(a: Array,
   if has_c:
     in_specs.append(pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)))
     operands.append(c_p)
+  if has_kv:
+    # one live-K scalar, shipped as a (1, 1) int32 block every grid step
+    in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+    operands.append(jnp.asarray(k_valid, jnp.int32).reshape(1, 1))
 
   out = pl.pallas_call(
       kernel,

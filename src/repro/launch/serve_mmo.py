@@ -64,6 +64,13 @@ def main(argv=None):
                   help="comma-separated problem sizes")
   ap.add_argument("--seed", type=int, default=0)
   ap.add_argument("--no-warmup", action="store_true")
+  ap.add_argument("--cost-table", default=None, metavar="PATH",
+                  help="JSON cost table for --backend auto (see "
+                       "repro.tuning.autotune); defaults to $REPRO_COST_TABLE")
+  ap.add_argument("--autotune", action="store_true",
+                  help="with --backend auto: measure this workload's buckets "
+                       "on the live device before serving (and persist to "
+                       "--cost-table if given)")
   args = ap.parse_args(argv)
 
   try:
@@ -74,8 +81,33 @@ def main(argv=None):
     ap.error(f"--sizes must be comma-separated positive ints, got "
              f"{args.sizes!r}")
   rng = np.random.default_rng(args.seed)
+
+  cost_table = None
+  if args.backend == "auto":
+    import os
+    from repro.tuning import CostTable, tune_for_requests
+    if args.cost_table and os.path.exists(args.cost_table):
+      cost_table = CostTable.load(args.cost_table)
+      print(f"[serve_mmo] loaded cost table {args.cost_table}: "
+            f"{len(cost_table)} entries ({cost_table.counts()})")
+    elif args.cost_table and not args.autotune:
+      # only --autotune may create the file; otherwise a missing table means
+      # serving would silently run untuned — fail loudly instead
+      ap.error(f"--cost-table {args.cost_table!r} does not exist "
+               f"(pass --autotune to create it)")
+    if args.autotune:
+      sample_rng = np.random.default_rng(args.seed)
+      sample = [synthesize_request(sample_rng, sizes) for _ in range(40)]
+      t0 = time.perf_counter()
+      cost_table = tune_for_requests(sample, table=cost_table)
+      print(f"[serve_mmo] autotune: {len(cost_table)} entries in "
+            f"{time.perf_counter() - t0:.2f}s")
+      if args.cost_table:
+        cost_table.save(args.cost_table)
+        print(f"[serve_mmo] persisted cost table to {args.cost_table}")
+
   engine = MMOEngine(backend=args.backend, max_batch=args.max_batch,
-                     min_bucket=args.min_bucket)
+                     min_bucket=args.min_bucket, cost_table=cost_table)
 
   if not args.no_warmup:
     t0 = time.perf_counter()

@@ -11,3 +11,13 @@ HBM_BYTES = 16 * 2**30        # 16 GiB per chip
 # at bf16 (the MXU:VPU ratio that mirrors the paper's TensorCore:CUDA-core
 # gap; used by the microbenchmark speedup model).
 VPU_RATIO = 1.0 / 16.0
+
+# Structural port hazard: these (⊕, ⊗) pairs issue two same-port VPU ops per
+# element (the paper's observed factor for fused min/max / or-and pairs).
+# Shared by the benchmark speedup model and the dispatch cost prior so the
+# two analytic models cannot drift apart.
+VPU_PORT_HAZARD_OPS = ("minmax", "maxmin", "orand")
+
+
+def vpu_hazard(op: str) -> float:
+  return 2.0 if op in VPU_PORT_HAZARD_OPS else 1.0

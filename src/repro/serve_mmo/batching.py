@@ -11,6 +11,10 @@ Three pieces per bucket:
                        batches carry a per-request valid-row count so padded
                        corpus rows are masked to +inf before top-k (data-
                        scale independent — no magic far-away sentinel).
+                       mmo/closure batches additionally carry a per-request
+                       live-K / valid-n vector: because the padding is an
+                       algebraic no-op, the backends may *skip* dead K work
+                       instead of computing it (ragged masked-K execution).
   ``make_batch_fn``  — the pure jax function the executable cache compiles:
                        mmo_batched / batched_*_closure (per-request
                        convergence masks) / addnorm+top-k.
@@ -19,7 +23,6 @@ Three pieces per bucket:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -50,17 +53,23 @@ def _stack_mmo(key: BucketKey, reqs: Sequence[ProblemRequest]):
   (has_c,) = key.params
   a = np.stack([_pad2d(r.arrays["a"], mb, kb, pa, pa) for r in reqs])
   b = np.stack([_pad2d(r.arrays["b"], kb, nb, pb, pb) for r in reqs])
+  # per-request live-K: lanes beyond a request's true K are contraction pads
+  # (⊗(pa, pb) == ⊕-identity), so backends may skip them (ragged masked-K)
+  kv = np.asarray([r.shape[1] for r in reqs], np.int32)
   if not has_c:
-    return (a, b)
+    return (a, b, kv)
   ident = False if boolean else sr_mod.get(key.op).oplus_identity
   c = np.stack([_pad2d(r.arrays["c"], mb, nb, ident, ident) for r in reqs])
-  return (a, b, c)
+  return (a, b, c, kv)
 
 
 def _stack_closure(key: BucketKey, reqs: Sequence[ProblemRequest]):
   (nb,) = key.shape
-  return (np.stack([cl_mod.pad_adjacency(r.arrays["adj"], nb, op=key.op)
-                    for r in reqs]),)
+  adj = np.stack([cl_mod.pad_adjacency(r.arrays["adj"], nb, op=key.op)
+                  for r in reqs])
+  # true problem sizes: rows/cols beyond valid[r] are isolated-vertex padding
+  valid = np.asarray([r.shape[0] for r in reqs], np.int32)
+  return (adj, valid)
 
 
 def _stack_knn(key: BucketKey, reqs: Sequence[ProblemRequest]):
@@ -95,10 +104,12 @@ def abstract_batch(key: BucketKey, batch: int):
     if has_c:
       shapes.append((batch, mb, nb))
     return tuple(jax.ShapeDtypeStruct(s, np.dtype(dt))
-                 for s, dt in zip(shapes, key.dtypes))
+                 for s, dt in zip(shapes, key.dtypes)) + (
+        jax.ShapeDtypeStruct((batch,), np.dtype(np.int32)),)
   if key.kind == "closure":
     (nb,) = key.shape
-    return (jax.ShapeDtypeStruct((batch, nb, nb), np.dtype(key.dtypes[0])),)
+    return (jax.ShapeDtypeStruct((batch, nb, nb), np.dtype(key.dtypes[0])),
+            jax.ShapeDtypeStruct((batch,), np.dtype(np.int32)))
   if key.kind == "knn":
     qb, rb, db = key.shape
     return (jax.ShapeDtypeStruct((batch, qb, db), np.dtype(key.dtypes[0])),
@@ -112,17 +123,23 @@ def abstract_batch(key: BucketKey, batch: int):
 # ---------------------------------------------------------------------------
 
 
-def make_batch_fn(key: BucketKey, *, backend: str,
+def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
                   interpret: Optional[bool] = None):
-  """Pure jax function over the stacked operands for one bucket."""
+  """Pure jax function over the stacked operands for one bucket.
+
+  ``backend``/``block`` are the bucket's dispatch decision (resolved once at
+  batch-build time by the engine and baked into the executable-cache key), so
+  a mixed-backend steady state replays stored executables and never retraces.
+  """
   if key.kind == "mmo":
     (has_c,) = key.params
 
     def fn(*args):
       a, b = args[0], args[1]
       c = args[2] if has_c else None
-      return mmo_batched(a, b, c, op=key.op, backend=backend,
-                         interpret=interpret)
+      kv = args[2 + has_c]
+      return mmo_batched(a, b, c, op=key.op, backend=backend, block=block,
+                         interpret=interpret, k_valid=kv)
 
     return fn
 
@@ -131,19 +148,24 @@ def make_batch_fn(key: BucketKey, *, backend: str,
     solver = (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
               else cl_mod.batched_bellman_ford_closure)
 
-    def mmo_fn(a, b, c, op, bk):
+    def mmo_fn(a, b, c, op, bk, k_valid=None):
       from repro.core.mmo import mmo as _mmo
-      return _mmo(a, b, c, op=op, backend=bk, interpret=interpret)
+      return _mmo(a, b, c, op=op, backend=bk, block=block,
+                  interpret=interpret, k_valid=k_valid)
 
-    return functools.partial(solver, op=key.op, backend=backend,
-                             mmo_fn=mmo_fn)
+    def fn(adj, valid):
+      return solver(adj, op=key.op, backend=backend, mmo_fn=mmo_fn,
+                    valid_n=valid)
+
+    return fn
 
   if key.kind == "knn":
     (k,) = key.params
 
     def fn(q, ref, valid):
       d2 = mmo_batched(q, jnp.swapaxes(ref, -1, -2), op="addnorm",
-                       backend=backend, interpret=interpret)
+                       backend=backend, block=block, interpret=interpret,
+                       k_valid=None)  # feature dim is never padded raggedly
       # mask padded corpus rows to +inf so they lose every top-k comparison
       row_ok = jnp.arange(d2.shape[-1]) < valid[:, None]  # (R, rb)
       d2 = jnp.where(row_ok[:, None, :], d2, jnp.inf)

@@ -28,7 +28,7 @@ from repro.serve_mmo import batching
 from repro.serve_mmo.api import MMOFuture, ProblemRequest
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.scheduler import (FifoBucketScheduler, MIN_BUCKET,
-                                       bucket_dim)
+                                       bucket_dim, contract_shape)
 
 
 @dataclasses.dataclass
@@ -74,13 +74,24 @@ class EngineStats:
 
 
 class MMOEngine:
-  """Serving engine for semiring problem requests (see api.py)."""
+  """Serving engine for semiring problem requests (see api.py).
+
+  ``backend="auto"`` resolves backend *and* block config per bucket from the
+  cost table (``cost_table=`` argument, else the process-global table — see
+  repro.tuning.dispatch) at batch-build time.  Decisions are memoized per
+  bucket and baked into the executable-cache key, so a mixed-backend steady
+  state replays one stored executable per (bucket, batch) and never retraces
+  even if the global table is later mutated.
+  """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
                min_bucket: int = MIN_BUCKET,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None,
+               cost_table=None):
     self.backend = backend
     self.interpret = interpret
+    self.cost_table = cost_table
+    self._decisions: dict = {}  # BucketKey → (backend, block cfg)
     self.scheduler = FifoBucketScheduler(min_bucket=min_bucket,
                                          max_batch=max_batch)
     self.cache = ExecutableCache()
@@ -120,6 +131,25 @@ class MMOEngine:
     log2(max_batch)+1 executables instead of one per arrival count."""
     return bucket_dim(r, 1)
 
+  def resolve_backend(self, key) -> tuple:
+    """(backend, block cfg) for one bucket — the dispatch decision.
+
+    Memoized: the first resolution a bucket ever gets is the one it keeps
+    for this engine's lifetime (stable executable-cache keys).
+    """
+    dec = self._decisions.get(key)
+    if dec is None:
+      if self.backend != "auto":
+        dec = (self.backend, ())
+      else:
+        from repro.tuning import dispatch as _dispatch
+        m, k, n = contract_shape(key)
+        d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
+                              table=self.cost_table)
+        dec = (d.backend, d.cfg)
+      self._decisions[key] = dec
+    return dec
+
   def step(self) -> int:
     """Schedule + execute one bucket batch; returns #requests completed."""
     with self._lock:
@@ -134,10 +164,11 @@ class MMOEngine:
       # fill the padded batch slots with copies of the last request — wasted
       # compute bounded at 2×, in exchange for a bounded executable set
       stacked = batching.stack_batch(key, reqs + [reqs[-1]] * (rb - len(reqs)))
-      exec_key = (key, rb, self.backend)
+      backend, block = self.resolve_backend(key)
+      exec_key = (key, rb, backend, block)
       compiled = self.cache.get_or_compile(
           exec_key,
-          lambda: batching.make_batch_fn(key, backend=self.backend,
+          lambda: batching.make_batch_fn(key, backend=backend, block=block,
                                          interpret=self.interpret),
           stacked)
       out = compiled(*stacked)
@@ -204,11 +235,12 @@ class MMOEngine:
             for req in sample_reqs}
     before = self.cache.misses
     for key in seen:
+      backend, block = self.resolve_backend(key)
       rb = 1
       while True:
         self.cache.get_or_compile(
-            (key, rb, self.backend),
-            lambda: batching.make_batch_fn(key, backend=self.backend,
+            (key, rb, backend, block),
+            lambda: batching.make_batch_fn(key, backend=backend, block=block,
                                            interpret=self.interpret),
             batching.abstract_batch(key, rb))
         if rb >= self.scheduler.max_batch:

@@ -19,8 +19,12 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.serve_mmo.api import ProblemRequest
+# Canonical bucketing lives in tuning.cost_table so the cost table's key —
+# the bucket signature — is the same function of a shape everywhere.
+from repro.tuning.cost_table import MIN_BUCKET, bucket_dim, bucket_shape
 
-MIN_BUCKET = 8
+__all__ = ["MIN_BUCKET", "BucketKey", "bucket_dim", "bucket_shape",
+           "contract_shape", "request_bucket", "FifoBucketScheduler"]
 
 
 class BucketKey(NamedTuple):
@@ -31,18 +35,18 @@ class BucketKey(NamedTuple):
   params: tuple
 
 
-def bucket_dim(n: int, min_bucket: int = MIN_BUCKET) -> int:
-  """Round ``n`` up to the next power of two, with a floor."""
-  if n <= 0:
-    raise ValueError(f"dimension must be positive, got {n}")
-  b = min_bucket
-  while b < n:
-    b *= 2
-  return b
-
-
-def bucket_shape(shape: tuple, min_bucket: int = MIN_BUCKET) -> tuple:
-  return tuple(bucket_dim(d, min_bucket) for d in shape)
+def contract_shape(key: BucketKey) -> tuple:
+  """The (M, K, N) contraction a bucket's executable runs per request — what
+  the cost table is keyed on and the dispatcher resolves with."""
+  if key.kind == "mmo":
+    return key.shape
+  if key.kind == "closure":
+    (nb,) = key.shape
+    return (nb, nb, nb)
+  if key.kind == "knn":
+    qb, rb, db = key.shape  # addnorm contracts the feature dim
+    return (qb, db, rb)
+  raise ValueError(f"unknown kind {key.kind!r}")
 
 
 def request_bucket(req: ProblemRequest,

@@ -1,0 +1,26 @@
+"""Measured cost-table dispatch: autotuned backend & block-size selection.
+
+The paper's SIMD² unit wins by picking the right datapath per instruction
+(MXU rewrite vs VPU rank-u loop, §3.1/§5).  This package is the software
+analogue of that choice for our three backends:
+
+  cost_table — versioned JSON table of measured (and analytically-priored)
+               seconds per (op, shape-bucket, dtype, backend, block config).
+  autotune   — microbenchmarks the live device to fill the table; --dry-prior
+               fills from the roofline prior only (CI schema check).
+  dispatch   — the brain of ``backend="auto"``: per call signature, return
+               the cheapest (backend, block config) the table knows about.
+"""
+from repro.tuning.cost_table import (CostEntry, CostTable, Decision,
+                                     DEFAULT_CONFIGS, SCHEMA_VERSION,
+                                     prior_seconds, signature)
+from repro.tuning.autotune import tune, tune_for_requests
+from repro.tuning.dispatch import (clear_cost_table, get_cost_table, resolve,
+                                   set_cost_table, use_cost_table)
+
+__all__ = [
+    "CostEntry", "CostTable", "Decision", "DEFAULT_CONFIGS", "SCHEMA_VERSION",
+    "prior_seconds", "signature", "tune", "tune_for_requests",
+    "clear_cost_table", "get_cost_table", "resolve", "set_cost_table",
+    "use_cost_table",
+]

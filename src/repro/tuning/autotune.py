@@ -1,0 +1,192 @@
+"""Autotuner: microbenchmark op × shape-bucket × dtype × backend × blocks.
+
+    PYTHONPATH=src python -m repro.tuning.autotune --out cost_table.json
+    PYTHONPATH=src python -m repro.tuning.autotune --dry-prior --out t.json
+
+Every point is first seeded with the analytic roofline prior, then (unless
+``--dry-prior``) measured on the live device with best-of wall timing; the
+table's measured-beats-prior precedence means re-running the tuner only ever
+sharpens the table.  ``--dry-prior`` exists for CI: it exercises the whole
+sweep → record → serialize path with zero device timing, so schema rot is
+caught without needing quiet hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import semiring as sr_mod
+from repro.tuning.cost_table import (CostTable, DEFAULT_CONFIGS,
+                                     bucket_shape, prior_seconds)
+
+DEFAULT_OPS = ("mma", "minplus", "maxmin", "maxmul", "orand", "addnorm")
+DEFAULT_SHAPES = ((64, 64, 64), (128, 128, 128), (64, 256, 64))
+DEFAULT_BACKENDS = ("xla", "vector", "pallas")
+
+
+def _device_label() -> str:
+  import jax
+  try:
+    dev = jax.devices()[0]
+    return f"{jax.default_backend()}:{getattr(dev, 'device_kind', dev)}"
+  except Exception:  # noqa: BLE001 — label only, never fail the tuner
+    return "unknown"
+
+
+def _operands(op: str, shape, dtype, seed: int = 0):
+  """Random operands at the bucket shape (bool for boolean rings)."""
+  m, k, n = bucket_shape(shape)
+  rng = np.random.default_rng(seed)
+  if sr_mod.get(op).boolean:
+    return (rng.random((m, k)) > 0.5), (rng.random((k, n)) > 0.5)
+  a = rng.standard_normal((m, k)).astype(dtype)
+  b = rng.standard_normal((k, n)).astype(dtype)
+  if op in ("minmul", "maxmul"):  # reliability rings want [0, 1] weights
+    a, b = np.abs(np.tanh(a)).astype(dtype), np.abs(np.tanh(b)).astype(dtype)
+  return a, b
+
+
+def measure_point(op: str, shape, dtype, backend: str, cfg: tuple, *,
+                  iters: int = 3, warmup: int = 1) -> float:
+  """Best-of wall seconds for one table point on the live device."""
+  import jax
+  import jax.numpy as jnp
+  from repro.core.mmo import mmo
+
+  a_h, b_h = _operands(op, shape, dtype)
+  a, b = jnp.asarray(a_h), jnp.asarray(b_h)
+  def run():
+    return mmo(a, b, op=op, backend=backend, block=cfg)
+  for _ in range(warmup):
+    jax.block_until_ready(run())
+  best = float("inf")
+  for _ in range(iters):
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    best = min(best, time.perf_counter() - t0)
+  return best
+
+
+def default_backends() -> tuple:
+  """Measurement-worthy backends for this host: Pallas is only a serving
+  option on TPU — on CPU it runs in interpret mode, orders of magnitude
+  slower, and measuring it would stall warmup for no dispatchable gain.
+  (``--dry-prior`` sweeps still cover it: priors cost nothing.)"""
+  import jax
+  return ("xla", "vector") + (
+      ("pallas",) if jax.default_backend() == "tpu" else ())
+
+
+def tune(*,
+         ops: Sequence[str] = DEFAULT_OPS,
+         shapes: Sequence[tuple] = DEFAULT_SHAPES,
+         dtypes: Sequence[str] = ("float32",),
+         backends: Optional[Sequence[str]] = None,
+         configs: Optional[dict] = None,
+         table: Optional[CostTable] = None,
+         iters: int = 3,
+         warmup: int = 1,
+         dry_prior: bool = False,
+         fill_prior: bool = True,
+         verbose: bool = False) -> CostTable:
+  """Sweep the grid, recording priors for every point and measurements for
+  all of them unless ``dry_prior``.  Updates and returns ``table``."""
+  if backends is None:
+    # dry-prior sweeps cost nothing — cover every backend for schema
+    # coverage; live measurement sticks to what this host can serve with
+    backends = DEFAULT_BACKENDS if dry_prior else default_backends()
+  configs = configs or DEFAULT_CONFIGS
+  if table is None:
+    table = CostTable(device="prior-only" if dry_prior else _device_label())
+  for op in ops:
+    boolean = sr_mod.get(op).boolean
+    op_dtypes = ("bool",) if boolean else dtypes
+    for shape in shapes:
+      for dtype in op_dtypes:
+        for backend in backends:
+          for cfg in configs.get(backend, ((),)):
+            if fill_prior:
+              table.record(op, shape, dtype, backend, cfg,
+                           prior_seconds(op, shape, dtype, backend, cfg),
+                           source="prior")
+            if dry_prior:
+              continue
+            seconds = measure_point(op, shape, dtype, backend, cfg,
+                                    iters=iters, warmup=warmup)
+            table.record(op, shape, dtype, backend, cfg, seconds,
+                         source="measured")
+            if verbose:
+              print(f"[autotune] {op} {shape} {dtype} {backend} {cfg}: "
+                    f"{seconds * 1e6:.1f}us", file=sys.stderr)
+  return table
+
+
+def tune_for_requests(reqs, **kw) -> CostTable:
+  """Tune exactly the (op, contraction-shape, dtype) points a sample of
+  serving requests exercises — the engine-warmup entry point."""
+  from repro.serve_mmo.scheduler import contract_shape, request_bucket
+  points = {}
+  for req in reqs:
+    key = request_bucket(req)
+    points.setdefault((key.op, contract_shape(key), key.dtypes[0]), None)
+  table = kw.pop("table", None)
+  if table is None:  # NB not `or`: an empty CostTable is falsy but valid
+    table = CostTable(device=_device_label())
+  for (op, shape, dtype) in points:
+    table = tune(ops=(op,), shapes=(shape,), dtypes=(dtype,), table=table,
+                 **kw)
+  return table
+
+
+def main(argv=None) -> int:
+  ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+  ap.add_argument("--out", default="cost_table.json",
+                  help="JSON path to write the table to")
+  ap.add_argument("--update", action="store_true",
+                  help="load --out first and update it in place")
+  ap.add_argument("--dry-prior", action="store_true",
+                  help="analytic prior only — no device timing (CI mode)")
+  ap.add_argument("--ops", default=",".join(DEFAULT_OPS))
+  ap.add_argument("--shapes",
+                  default=",".join("x".join(map(str, s))
+                                   for s in DEFAULT_SHAPES),
+                  help="comma-separated MxKxN triples, e.g. 64x64x64,128x128x128")
+  ap.add_argument("--dtypes", default="float32")
+  ap.add_argument("--backends", default=None,
+                  help="comma-separated; default: every backend for "
+                       "--dry-prior, else what this host can serve with")
+  ap.add_argument("--iters", type=int, default=3)
+  ap.add_argument("--warmup", type=int, default=1)
+  ap.add_argument("-v", "--verbose", action="store_true")
+  args = ap.parse_args(argv)
+
+  try:
+    shapes = tuple(tuple(int(d) for d in s.split("x"))
+                   for s in args.shapes.split(","))
+    if any(len(s) != 3 for s in shapes):
+      raise ValueError
+  except ValueError:
+    ap.error(f"--shapes must be comma-separated MxKxN triples, got "
+             f"{args.shapes!r}")
+
+  table = CostTable.load(args.out) if args.update else None
+  backends = tuple(args.backends.split(",")) if args.backends else None
+  table = tune(ops=tuple(args.ops.split(",")), shapes=shapes,
+               dtypes=tuple(args.dtypes.split(",")),
+               backends=backends, table=table,
+               iters=args.iters, warmup=args.warmup,
+               dry_prior=args.dry_prior, verbose=args.verbose)
+  table.save(args.out)
+  counts = table.counts()
+  print(f"[autotune] wrote {args.out}: {len(table)} entries "
+        f"({counts['measured']} measured, {counts['prior']} prior) "
+        f"device={table.device}")
+  return 0
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,87 @@
+"""The brain of ``backend="auto"``: cost-table-driven backend selection.
+
+``resolve(op, m, k, n, dtype)`` returns the cheapest (backend, block config)
+the active cost table knows for the call's bucket signature, falling back to
+the historical default ('xla') when no table is loaded or the table has no
+entry for the point.  Resolution is host-side dict work — cheap enough for
+the ``mmo`` wrapper to run per call, and deterministic so the serving
+engine's per-bucket memoization and the executable cache agree.
+
+The active table is process-global (``set_cost_table`` / ``use_cost_table``)
+and can be seeded from the ``REPRO_COST_TABLE`` environment variable, which
+is how a warmed, persisted table ships into a serving job.  Callers that
+need isolation (the engine, tests) pass ``table=`` explicitly instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional, Sequence, Union
+
+from repro.tuning.cost_table import CostTable, Decision
+
+ENV_VAR = "REPRO_COST_TABLE"
+DEFAULT_BACKEND = "xla"
+
+_lock = threading.Lock()
+_table: Optional[CostTable] = None
+_env_checked = False
+
+
+def set_cost_table(table: Union[CostTable, str, None]) -> None:
+  """Install the process-global cost table (a CostTable or a JSON path).
+  ``None`` means *explicitly no table* — the env-var lookup stays disarmed,
+  so ``use_cost_table(None)`` really scopes to table-less dispatch even when
+  ``$REPRO_COST_TABLE`` is set.  Use ``clear_cost_table`` to re-arm the env
+  default instead."""
+  global _table, _env_checked
+  with _lock:
+    if isinstance(table, (str, os.PathLike)):
+      table = CostTable.load(table)
+    _table = table
+    _env_checked = True
+
+
+def clear_cost_table() -> None:
+  """Drop the installed table and re-arm the ``$REPRO_COST_TABLE`` lookup
+  (process-default state)."""
+  global _table, _env_checked
+  with _lock:
+    _table = None
+    _env_checked = False
+
+
+def get_cost_table() -> Optional[CostTable]:
+  """Active global table; loads ``$REPRO_COST_TABLE`` once if set."""
+  global _table, _env_checked
+  with _lock:
+    if _table is None and not _env_checked:
+      _env_checked = True
+      path = os.environ.get(ENV_VAR)
+      if path:
+        _table = CostTable.load(path)
+    return _table
+
+
+@contextlib.contextmanager
+def use_cost_table(table: Union[CostTable, str, None]):
+  """Scoped ``set_cost_table`` (restores the previous table on exit)."""
+  prev = get_cost_table()
+  set_cost_table(table)
+  try:
+    yield get_cost_table()
+  finally:
+    set_cost_table(prev)
+
+
+def resolve(op: str, m: int, k: int, n: int, dtype, *,
+            table: Optional[CostTable] = None,
+            backends: Optional[Sequence[str]] = None) -> Decision:
+  """Dispatch decision for one call signature (raw or bucketed shape)."""
+  table = table if table is not None else get_cost_table()
+  if table is not None:
+    choice = table.best(op, (m, k, n), dtype, backends=backends)
+    if choice is not None:
+      return choice
+  return Decision(DEFAULT_BACKEND, (), float("inf"), "default")

@@ -66,6 +66,37 @@ def test_semiring_kernel_batched():
   np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.parametrize("op", ["mma", "minplus", "maxmin", "orand"])
+def test_semiring_kernel_masked_k(op):
+  """Per-request k_valid skips dead K-blocks without changing the result:
+  lanes at/beyond k_valid hold contraction pads (⊗(pa, pb) == ⊕-identity),
+  so the skipped blocks were algebraic no-ops by construction."""
+  from repro.core.semiring import contraction_pads, get as get_sr
+  r, m, k, n = 3, 16, 64, 24
+  kv = np.asarray([24, 40, 64], np.int32)
+  pa, pb = contraction_pads(op)
+  a = RNG.standard_normal((r, m, k)).astype(np.float32)
+  b = RNG.standard_normal((r, k, n)).astype(np.float32)
+  if get_sr(op).boolean:
+    a, b = a > 0.3, b > 0.3
+    pa = pb = False
+  for i, kvi in enumerate(kv):
+    a[i, :, kvi:] = pa
+    b[i, kvi:, :] = pb
+  got = semiring_mmo(jnp.asarray(a), jnp.asarray(b), op=op, bk=16,
+                     interpret=True, k_valid=jnp.asarray(kv))
+  ref = semiring_mmo_ref(jnp.asarray(a), jnp.asarray(b), op=op)
+  np.testing.assert_allclose(np.asarray(got, np.float64),
+                             np.asarray(ref, np.float64), rtol=1e-4,
+                             atol=1e-4)
+  # scalar k_valid on a single 2-D problem
+  got0 = semiring_mmo(jnp.asarray(a[0]), jnp.asarray(b[0]), op=op, bk=16,
+                      interpret=True, k_valid=24)
+  np.testing.assert_allclose(np.asarray(got0, np.float64),
+                             np.asarray(ref, np.float64)[0], rtol=1e-4,
+                             atol=1e-4)
+
+
 FA_CASES = [
     # b, h, hkv, sq, skv, d, causal, window
     (2, 4, 2, 128, 128, 64, True, None),

@@ -45,6 +45,46 @@ def test_mmo_batched_rejects_2d():
     mmo_batched(a, a)
 
 
+def test_mmo_batched_rejects_2d_c():
+  a = jnp.zeros((2, 3, 4))
+  b = jnp.zeros((2, 4, 5))
+  with pytest.raises(ValueError, match=r"\(R, M, N\) for c"):
+    mmo_batched(a, b, jnp.zeros((3, 5)))
+  with pytest.raises(ValueError, match="request-axis mismatch"):
+    mmo_batched(a, b, jnp.zeros((3, 3, 5)))
+
+
+@pytest.mark.parametrize("op", ["minplus", "maxmin", "orand"])
+@pytest.mark.parametrize("algorithm", ["leyzorek", "bellman_ford"])
+def test_ragged_masked_k_closure_matches_padded(op, algorithm):
+  """valid_n work skipping changes which K-blocks execute, never the result
+  (padded lanes are algebraic no-ops, converged requests are frozen)."""
+  sizes = [6, 9, 13, 16]
+  nb = 16
+  if op == "orand":
+    ws = [graphs.boolean_digraph(n, 0.15, seed=n) for n in sizes]
+  elif op == "maxmin":
+    ws = [graphs.capacity_graph(n, 0.3, seed=n) for n in sizes]
+  else:
+    ws = [graphs.weighted_digraph(n, 0.3, seed=n) for n in sizes]
+  prepared = [prepare_adjacency(jnp.asarray(w), op=op) for w in ws]
+  stack = jnp.stack([pad_adjacency(p, nb, op=op) for p in prepared])
+  solver = (batched_leyzorek_closure if algorithm == "leyzorek"
+            else batched_bellman_ford_closure)
+  valid = jnp.asarray(sizes, jnp.int32)
+  # small block_k so ragged skipping actually partitions the K axis
+  def mmo_fn(a, b, c, op_, bk, k_valid=None):
+    from repro.core.mmo import mmo
+    return mmo(a, b, c, op=op_, backend=bk, block_k=4, k_valid=k_valid)
+
+  padded, it_p = solver(stack, op=op, backend="xla", mmo_fn=mmo_fn)
+  ragged, it_r = solver(stack, op=op, backend="xla", mmo_fn=mmo_fn,
+                        valid_n=valid)
+  np.testing.assert_allclose(np.asarray(ragged, np.float64),
+                             np.asarray(padded, np.float64), atol=1e-5)
+  np.testing.assert_array_equal(np.asarray(it_r), np.asarray(it_p))
+
+
 @pytest.mark.parametrize("op", ["minplus", "maxmin", "orand"])
 def test_batched_closure_matches_unbatched(op):
   """Padded (R, nb, nb) batched closure == per-request closure, and the
@@ -221,6 +261,55 @@ def test_cache_zero_recompiles_on_repeat_traffic():
   futs = traffic()  # identical shapes → identical buckets → pure cache hits
   assert eng.cache.misses == misses
   assert all(f.done() for f in futs)
+
+
+def test_mixed_backend_buckets_zero_retraces():
+  """Steady-state serving with *per-bucket* backend selection: two buckets
+  resolved to different backends replay their executables with zero cache
+  misses after warmup — the dispatch decision is part of the cache key."""
+  from repro.tuning import CostTable
+  table = CostTable(device="test")
+  nb = (16, 16, 16)
+  table.record("minplus", nb, "float32", "vector", (128,), 1e-6)
+  table.record("minplus", nb, "float32", "xla", (512,), 1.0)
+  table.record("orand", nb, "bool", "xla", (512,), 1e-6)
+  table.record("orand", nb, "bool", "vector", (128,), 1.0)
+  eng = MMOEngine(backend="auto", max_batch=4, cost_table=table)
+
+  def traffic():
+    futs = [eng.submit(apsp_request(graphs.weighted_digraph(n, 0.3, seed=n)))
+            for n in (9, 11, 13)]
+    futs.append(eng.submit(reachability_request(
+        graphs.boolean_digraph(10, 0.15, seed=1))))
+    eng.run_until_idle()
+    return futs
+
+  futs = traffic()
+  assert {b for b, _ in eng._decisions.values()} == {"vector", "xla"}
+  misses = eng.cache.misses
+  assert misses > 0
+  futs2 = traffic()  # steady state: mixed backends, zero retraces
+  assert eng.cache.misses == misses
+  assert all(f.done() for f in futs + futs2)
+  for fut, n in zip(futs, (9, 11, 13)):
+    ref, _ = solvers.apsp(graphs.weighted_digraph(n, 0.3, seed=n))
+    np.testing.assert_allclose(fut.result().value, np.asarray(ref), atol=1e-5)
+  ref, _ = solvers.gtc(graphs.boolean_digraph(10, 0.15, seed=1))
+  np.testing.assert_array_equal(futs[-1].result().value, np.asarray(ref))
+
+
+def test_prewarm_resolves_like_step():
+  """prewarm and step must agree on the (backend, block) part of the cache
+  key, or warmed engines would recompile on first real traffic."""
+  from repro.tuning import CostTable
+  table = CostTable(device="test")
+  table.record("minplus", (16, 16, 16), "float32", "vector", (128,), 1e-6)
+  eng = MMOEngine(backend="auto", max_batch=2, cost_table=table)
+  eng.prewarm([apsp_request(graphs.weighted_digraph(10, 0.3, seed=0))])
+  misses = eng.cache.misses
+  eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=1)))
+  eng.run_until_idle()
+  assert eng.cache.misses == misses
 
 
 def test_prewarm_covers_batch_variants():
