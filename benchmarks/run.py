@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
   Fig 11  apps_bench            Table 5 area_table
   §Roofline  roofline_table (from dry-run artifacts, if present)
   §Dispatch  dispatch_bench (auto vs fixed backends → BENCH_dispatch.json)
+  §Sharding  shard_bench (local vs distributed schedules → BENCH_shard.json;
+             re-execs itself with 8 fake host devices on CPU)
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import traceback
 def main() -> None:
   from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
                           microbench_shapes, microbench_square,
-                          roofline_table, sparse_bench)
+                          roofline_table, shard_bench, sparse_bench)
   print("name,us_per_call,derived")
   suites = (
       ("fig9", microbench_square.main),
@@ -27,6 +29,7 @@ def main() -> None:
       ("table5", area_table.main),
       ("roofline", roofline_table.main),
       ("dispatch", dispatch_bench.main),
+      ("shard", shard_bench.main),
   )
   failed = []
   for name, fn in suites:

@@ -23,6 +23,17 @@ generalized all-reduce.  Three schedules are provided:
 
 All three return bit-identical results (tests assert so on a host-device
 mesh) and accept every registered op.
+
+Each schedule also has a **batched** variant (``*_batched``) over a leading
+replicated request axis — the serving engine's sharded execution path: one
+bucket batch too big for a single device runs the same contraction with its
+problem axes sharded across the mesh, while the request axis stays whole so
+per-request ``k_valid`` masks (ragged masked-K, PR 2) keep working.  K-sharded
+schedules rebase ``k_valid`` per shard/step, so ragged work skipping survives
+distribution.  ``sharded_closure_batched`` runs the batched Leyzorek /
+Bellman-Ford fixpoint (per-request convergence masks and all) with every ⊕/⊗
+step executing as a mesh schedule — SUMMA squaring being the workhorse, since
+C stays 2-D-sharded in place across iterations.
 """
 from __future__ import annotations
 
@@ -44,6 +55,19 @@ else:  # pragma: no cover — older jax keeps it under experimental
 # jax.lax.pvary only exists on newer jax (varying-axis annotations for
 # shard_map rep-checking); older versions don't need the annotation.
 pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+
+def _shard_map(kernel, *, mesh, in_specs, out_specs, check_rep=True):
+  """shard_map with a version-tolerant ``check_rep``: the ragged masked-K
+  path lowers its dynamic K-block trip count to a ``while``, which has no
+  replication rule — those callers pass check_rep=False.  Newer jax versions
+  renamed/dropped the kwarg, so fall back to the bare call."""
+  try:
+    return shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=check_rep)
+  except TypeError:  # pragma: no cover — future jax without check_rep
+    return shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs)
 
 Array = jax.Array
 
@@ -142,6 +166,315 @@ def ring_mmo(a: Array, b: Array, c: Optional[Array], *, op: str, mesh: Mesh,
   fn = shard_map(kernel, mesh=mesh, in_specs=in_specs,
                  out_specs=P(None, axis))
   return fn(a, b, c)
+
+
+# ---------------------------------------------------------------------------
+# Batched schedules — a leading request axis (the serving engine's sharded
+# bucket-batch path).  kspan/summa/ring shard the *problem* axes and keep the
+# request axis replicated (specs mirror the unbatched variants with a ``None``
+# prepended); ``dp`` shards the *request* axis over every mesh device and
+# needs no collectives at all.  ``k_valid`` is one live-K count per request.
+# ---------------------------------------------------------------------------
+
+SCHEDULES = ("dp", "kspan", "summa", "ring")
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+  """The composite leading-axis sharding for dp: every mesh axis at once."""
+  return tuple(mesh.axis_names)
+
+
+def _local_kv(kv, axis, k_chunk):
+  """Rebase a per-request global live-K count onto this shard's K-chunk
+  [idx·k_chunk, (idx+1)·k_chunk): lanes before the chunk are someone else's,
+  lanes past the global count are dead pads either way."""
+  if kv is None:
+    return None
+  idx = jax.lax.axis_index(axis)
+  return jnp.clip(kv - idx * k_chunk, 0, k_chunk)
+
+
+def mmo_dp_batched(a: Array, b: Array, c: Optional[Array] = None, *,
+                   op: str, mesh: Mesh, backend: str = "xla",
+                   block: Optional[tuple] = None,
+                   interpret: Optional[bool] = None,
+                   k_valid: Optional[Array] = None) -> Array:
+  """Batched data-parallel contraction: requests sharded over all devices.
+
+  Each device contracts its own R/P requests locally — zero collectives,
+  the vLLM-style scale-out schedule for a bucket batch of *independent*
+  problems.  Requires R divisible by the mesh's device count (the engine
+  falls back to 'local' for partial batches).
+  """
+  if a.shape[0] % mesh.size:
+    raise ValueError(f"dp needs the request axis ({a.shape[0]}) divisible by "
+                     f"the mesh's {mesh.size} devices")
+  sr = sr_mod.get(op)
+  axes = _dp_axes(mesh)
+  spec = P(axes, None, None)
+
+  def kernel(a_blk, b_blk, c_blk, kv):
+    return _mmo(a_blk, b_blk, c_blk, op=sr.name, backend=backend,
+                block=block or None, interpret=interpret, k_valid=kv)
+
+  in_specs = (spec, spec, None if c is None else spec,
+              None if k_valid is None else P(axes))
+  fn = _shard_map(kernel, mesh=mesh, in_specs=in_specs, out_specs=spec,
+                  check_rep=k_valid is None)
+  return fn(a, b, c, k_valid)
+
+
+def mmo_kspan_batched(a: Array, b: Array, c: Optional[Array] = None, *,
+                      op: str, mesh: Mesh, axis: str = "model",
+                      backend: str = "xla", block: Optional[tuple] = None,
+                      interpret: Optional[bool] = None,
+                      k_valid: Optional[Array] = None) -> Array:
+  """Batched K-sharded contraction + ⊕-all-reduce along ``axis``.
+
+  A: (R, M, K) and B: (R, K, N) sharded on K; C/D and ``k_valid`` replicated.
+  """
+  sr = sr_mod.get(op)
+  k_chunk = a.shape[-1] // mesh.shape[axis]
+
+  def kernel(a_blk, b_blk, c_blk, kv):
+    part = _mmo(a_blk, b_blk, None, op=sr.name, backend=backend,
+                block=block or None, interpret=interpret,
+                k_valid=_local_kv(kv, axis, k_chunk))
+    full = sr_mod.oplus_allreduce(sr, part, axis)
+    if c_blk is not None:
+      full = sr.oplus(full, c_blk.astype(full.dtype))
+    return full
+
+  in_specs = (P(None, None, axis), P(None, axis, None),
+              None if c is None else P(None, None, None),
+              None if k_valid is None else P(None))
+  fn = _shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                  out_specs=P(None, None, None),
+                  check_rep=k_valid is None)
+  return fn(a, b, c, k_valid)
+
+
+def summa_mmo_batched(a: Array, b: Array, c: Optional[Array] = None, *,
+                      op: str, mesh: Mesh, row_axis: str = "data",
+                      col_axis: str = "model", backend: str = "xla",
+                      block: Optional[tuple] = None,
+                      interpret: Optional[bool] = None,
+                      k_valid: Optional[Array] = None) -> Array:
+  """Batched 2-D SUMMA: operands/result 2-D block-sharded per request.
+
+  Each device all-gathers its K-panels and contracts a (M/p, K)×(K, N/q)
+  block per request; K is whole after the gathers, so ``k_valid`` applies
+  unrebased.
+  """
+  sr = sr_mod.get(op)
+
+  def kernel(a_blk, b_blk, c_blk, kv):
+    a_row = jax.lax.all_gather(a_blk, col_axis, axis=2, tiled=True)
+    b_col = jax.lax.all_gather(b_blk, row_axis, axis=1, tiled=True)
+    out = _mmo(a_row, b_col, None, op=sr.name, backend=backend,
+               block=block or None, interpret=interpret, k_valid=kv)
+    if c_blk is not None:
+      out = sr.oplus(out, c_blk.astype(out.dtype))
+    return out
+
+  spec = P(None, row_axis, col_axis)
+  fn = _shard_map(kernel, mesh=mesh,
+                  in_specs=(spec, spec, None if c is None else spec,
+                            None if k_valid is None else P(None)),
+                  out_specs=spec, check_rep=k_valid is None)
+  return fn(a, b, c, k_valid)
+
+
+def ring_mmo_batched(a: Array, b: Array, c: Optional[Array] = None, *,
+                     op: str, mesh: Mesh, axis: str = "model",
+                     backend: str = "xla", block: Optional[tuple] = None,
+                     interpret: Optional[bool] = None,
+                     k_valid: Optional[Array] = None) -> Array:
+  """Batched 1-D ring: B K-sharded and rotating, device j owns output
+  columns D[:, :, Nj]; each step's contraction overlaps the next permute."""
+  sr = sr_mod.get(op)
+  n_dev = mesh.shape[axis]
+
+  def kernel(a_blk, b_blk, c_blk, kv):
+    # a_blk: (R, M, K) replicated; b_blk: (R, K/p, N) rotating K-chunk.
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    k_chunk = b_blk.shape[1]
+    n_cols = b_blk.shape[2] // n_dev
+
+    def step(i, state):
+      b_cur, acc = state
+      src = (idx - i) % n_dev  # chunk origin after i forward rotations
+      a_piece = jax.lax.dynamic_slice_in_dim(a_blk, src * k_chunk, k_chunk, 2)
+      b_cols = jax.lax.dynamic_slice_in_dim(b_cur, idx * n_cols, n_cols, 2)
+      kv_step = None if kv is None else jnp.clip(kv - src * k_chunk, 0,
+                                                 k_chunk)
+      part = _mmo(a_piece, b_cols, None, op=sr.name, backend=backend,
+                  block=block or None, interpret=interpret, k_valid=kv_step)
+      acc = sr.oplus(acc, part.astype(acc.dtype))
+      b_nxt = jax.lax.ppermute(b_cur, axis, perm)
+      return b_nxt, acc
+
+    r, m = a_blk.shape[0], a_blk.shape[1]
+    acc0 = sr.identity_like((r, m, n_cols), sr.acc_dtype(a_blk.dtype))
+    acc0 = pvary(acc0, (axis,))
+    _, acc = jax.lax.fori_loop(0, n_dev, step, (b_blk, acc0))
+    if c_blk is not None:
+      acc = sr.oplus(acc, c_blk.astype(acc.dtype))
+    return acc
+
+  in_specs = (P(None, None, None), P(None, axis, None),
+              None if c is None else P(None, None, axis),
+              None if k_valid is None else P(None))
+  fn = _shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                  out_specs=P(None, None, axis),
+                  check_rep=k_valid is None)
+  return fn(a, b, c, k_valid)
+
+
+def mmo_sharded_batched(a: Array, b: Array, c: Optional[Array] = None, *,
+                        op: str, schedule: str, mesh: Mesh,
+                        backend: str = "xla", block: Optional[tuple] = None,
+                        interpret: Optional[bool] = None,
+                        k_valid: Optional[Array] = None) -> Array:
+  """One batched mesh schedule by name — the engine's sharded entry point.
+
+  Axis convention: the mesh's first axis is the SUMMA row axis, its last the
+  SUMMA column / K-span / ring axis (a (1, p) mesh therefore runs kspan and
+  ring over all p devices and SUMMA as a 1×p column split).
+  """
+  row_axis, col_axis = mesh.axis_names[0], mesh.axis_names[-1]
+  if schedule == "dp":
+    return mmo_dp_batched(a, b, c, op=op, mesh=mesh, backend=backend,
+                          block=block, interpret=interpret, k_valid=k_valid)
+  if schedule == "kspan":
+    return mmo_kspan_batched(a, b, c, op=op, mesh=mesh, axis=col_axis,
+                             backend=backend, block=block,
+                             interpret=interpret, k_valid=k_valid)
+  if schedule == "summa":
+    return summa_mmo_batched(a, b, c, op=op, mesh=mesh, row_axis=row_axis,
+                             col_axis=col_axis, backend=backend, block=block,
+                             interpret=interpret, k_valid=k_valid)
+  if schedule == "ring":
+    return ring_mmo_batched(a, b, c, op=op, mesh=mesh, axis=col_axis,
+                            backend=backend, block=block,
+                            interpret=interpret, k_valid=k_valid)
+  raise ValueError(f"unknown schedule {schedule!r}; pick from {SCHEDULES}")
+
+
+def schedule_fits(schedule: str, m: int, k: int, n: int, mesh: Mesh) -> bool:
+  """Whether a contraction's problem axes divide evenly onto the mesh for
+  one schedule (shard_map requires exact partitions; bucket dims are powers
+  of two, so any pow2 mesh axis ≤ the dim fits)."""
+  rows, cols = mesh.shape[mesh.axis_names[0]], mesh.shape[mesh.axis_names[-1]]
+  if schedule == "dp":
+    return True  # no problem-axis constraint; the request axis is checked
+    # at batch-build time (the engine falls back to 'local' when the padded
+    # batch doesn't divide over the mesh)
+  if schedule == "kspan":
+    return k % cols == 0
+  if schedule == "summa":
+    # K is sharded over cols on A and over rows on B before the all-gathers
+    return (m % rows == 0 and n % cols == 0
+            and k % rows == 0 and k % cols == 0)
+  if schedule == "ring":
+    return k % cols == 0 and n % cols == 0
+  return False
+
+
+def sharded_closure_batched(adj: Array, *, op: str,
+                            algorithm: str = "leyzorek",
+                            mesh: Mesh, schedule: str = "summa",
+                            backend: str = "xla",
+                            block: Optional[tuple] = None,
+                            interpret: Optional[bool] = None,
+                            max_iters: Optional[int] = None,
+                            valid_n: Optional[Array] = None):
+  """Batched semiring fixpoint with the mesh schedule threaded through.
+
+  For the contraction schedules (kspan/summa/ring) this reuses the batched
+  closure machinery (per-request convergence masks, converged requests
+  dropping to ``k_valid=0``) with the mmo step swapped for a mesh schedule.
+  SUMMA is the natural choice — C stays 2-D-sharded in place between
+  iterations — but any schedule name works (GSPMD reshards between steps
+  for the others).
+
+  ``"dp"`` instead shards the *request* axis and runs one independent
+  fixpoint per device: each shard's ``while`` loop exits as soon as its own
+  requests converge, so a straggler (a high-diameter graph that needs the
+  full lg(n) squarings) no longer drags every other request through its
+  extra iterations — the schedule that wins whenever a bucket batch mixes
+  convergence speeds.  Returns (closure, per-request iterations).
+  """
+  if schedule == "dp":
+    if adj.shape[0] % mesh.size:
+      raise ValueError(f"dp needs the request axis ({adj.shape[0]}) "
+                       f"divisible by the mesh's {mesh.size} devices")
+    fn = _dp_closure_fn(op, algorithm, backend, block, interpret,
+                        max_iters, valid_n is not None, mesh)
+    return fn(adj, valid_n)
+
+  solver = _closure_solver(algorithm)
+  return solver(adj, op=op, backend=backend,
+                mmo_fn=_sched_mmo_fn(schedule, mesh, backend, block,
+                                     interpret),
+                max_iters=max_iters, valid_n=valid_n)
+
+
+def _closure_solver(algorithm: str):
+  from repro.core import closure as cl_mod  # local import: no cycle at load
+  return (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
+          else cl_mod.batched_bellman_ford_closure)
+
+
+@functools.lru_cache(maxsize=None)
+def _sched_mmo_fn(schedule: str, mesh: Mesh, backend: str,
+                  block: Optional[tuple] = None,
+                  interpret: Optional[bool] = None):
+  """One mmo_fn per (schedule, mesh, backend) — the solvers jit with
+  ``mmo_fn`` as a static argument (hashed by identity), so handing them a
+  fresh closure per call would retrace the whole fixpoint every time."""
+
+  def mmo_fn(a, b, c, op_, bk, k_valid=None):
+    del bk  # same value as the memoized ``backend`` (the solver echoes it)
+    return mmo_sharded_batched(a, b, c, op=op_, schedule=schedule, mesh=mesh,
+                               backend=backend, block=block,
+                               interpret=interpret, k_valid=k_valid)
+
+  return mmo_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _local_mmo_fn(block: Optional[tuple], interpret: Optional[bool]):
+  """Shard-local mmo step honoring a tuned block config / interpret flag;
+  None (default settings) lets the solver use its own default step."""
+  if not block and interpret is None:
+    return None
+
+  def mmo_fn(a, b, c, op_, bk, k_valid=None):
+    return _mmo(a, b, c, op=op_, backend=bk, block=block or None,
+                interpret=interpret, k_valid=k_valid)
+
+  return mmo_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_closure_fn(op: str, algorithm: str, backend: str,
+                   block: Optional[tuple], interpret: Optional[bool],
+                   max_iters: Optional[int], has_valid: bool, mesh: Mesh):
+  """Memoized jitted dp fixpoint (stable identity → stable jit cache)."""
+  solver = _closure_solver(algorithm)
+  axes = _dp_axes(mesh)
+
+  def kernel(adj_blk, vn_blk):
+    return solver(adj_blk, op=op, backend=backend, mmo_fn=_local_mmo_fn(
+        block, interpret), max_iters=max_iters, valid_n=vn_blk)
+
+  return jax.jit(_shard_map(
+      kernel, mesh=mesh,
+      in_specs=(P(axes, None, None), P(axes) if has_valid else None),
+      out_specs=(P(axes, None, None), P(axes)),
+      check_rep=False))  # per-shard fixpoint lowers to `while`
 
 
 # ---------------------------------------------------------------------------

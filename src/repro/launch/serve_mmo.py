@@ -3,12 +3,23 @@
     PYTHONPATH=src python -m repro.launch.serve_mmo --rate 40 --duration 3 \
         --backend xla --max-batch 8
 
+    # sharded serving: big buckets run as mesh schedules over 8 devices
+    # (3e7 FLOPs ≈ the bucket-256 crossover BENCH_shard.json measures on CPU)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve_mmo --mesh 2,4 --schedule dp \
+        --sizes 24,96,200 --shard-flops 3e7 --rate 20
+
 Generates a Poisson arrival stream of mixed SIMD² problems (APSP, KNN,
 reachability, raw mmo at several sizes), submits each request at its arrival
 time against the engine's background serving loop, and reports throughput
 (problems/s), latency percentiles, bucket occupancy, and executable-cache
 behavior.  Open-loop means arrivals do NOT wait for completions — the
 process-level property that makes p99 honest under load.
+
+``--mesh dp,mp`` builds a (data=dp, model=mp) device mesh and turns on the
+engine's sharded bucket path: buckets whose per-request contraction exceeds
+``--shard-flops`` execute as batched distributed schedules (dp / SUMMA /
+kspan / ring per ``--schedule``), the rest stay single-device.
 """
 from __future__ import annotations
 
@@ -64,6 +75,17 @@ def main(argv=None):
                   help="comma-separated problem sizes")
   ap.add_argument("--seed", type=int, default=0)
   ap.add_argument("--no-warmup", action="store_true")
+  ap.add_argument("--mesh", default=None, metavar="DP,MP",
+                  help="device mesh axis sizes, e.g. '2,4' (data=2, model=4);"
+                       " enables the sharded bucket path")
+  ap.add_argument("--schedule", default="auto",
+                  choices=("auto", "dp", "summa", "kspan", "ring", "local"),
+                  help="distributed schedule for over-threshold buckets "
+                       "(auto: cost-table mesh rows / roofline prior; dp: "
+                       "requests sharded over all devices)")
+  ap.add_argument("--shard-flops", type=float, default=1e8,
+                  help="per-request contraction FLOP cutoff above which a "
+                       "bucket routes to the mesh")
   ap.add_argument("--cost-table", default=None, metavar="PATH",
                   help="JSON cost table for --backend auto (see "
                        "repro.tuning.autotune); defaults to $REPRO_COST_TABLE")
@@ -81,6 +103,29 @@ def main(argv=None):
     ap.error(f"--sizes must be comma-separated positive ints, got "
              f"{args.sizes!r}")
   rng = np.random.default_rng(args.seed)
+
+  mesh = None
+  if args.mesh:
+    import jax
+    try:
+      dims = tuple(int(x) for x in args.mesh.split(","))
+      if not 1 <= len(dims) <= 2 or any(d <= 0 for d in dims):
+        raise ValueError
+    except ValueError:
+      ap.error(f"--mesh must be 'dp,mp' positive ints, got {args.mesh!r}")
+    if len(dims) == 1:
+      dims = (1, dims[0])
+    need = dims[0] * dims[1]
+    have = len(jax.devices())
+    if need > have:
+      ap.error(f"--mesh {args.mesh} needs {need} devices, host has {have} "
+               f"(on CPU: XLA_FLAGS=--xla_force_host_platform_device_count="
+               f"{need})")
+    mesh = jax.make_mesh(dims, ("data", "model"))
+    print(f"[serve_mmo] mesh data={dims[0]} × model={dims[1]} "
+          f"schedule={args.schedule} shard_flops={args.shard_flops:g}")
+  elif args.schedule != "auto":
+    ap.error(f"--schedule {args.schedule} requires --mesh")
 
   cost_table = None
   if args.backend == "auto":
@@ -107,7 +152,9 @@ def main(argv=None):
         print(f"[serve_mmo] persisted cost table to {args.cost_table}")
 
   engine = MMOEngine(backend=args.backend, max_batch=args.max_batch,
-                     min_bucket=args.min_bucket, cost_table=cost_table)
+                     min_bucket=args.min_bucket, cost_table=cost_table,
+                     mesh=mesh, schedule=args.schedule if mesh else "auto",
+                     shard_flops=args.shard_flops)
 
   if not args.no_warmup:
     t0 = time.perf_counter()
@@ -146,6 +193,11 @@ def main(argv=None):
         f"p99={st.percentile(99) * 1e3:.1f}ms")
   print(f"[serve_mmo] batches={st.batches} mean_batch={st.mean_batch:.2f} "
         f"cache={st.cache}")
+  if mesh is not None:
+    placement: dict = {}
+    for s in engine._schedules.values():
+      placement[s] = placement.get(s, 0) + 1
+    print(f"[serve_mmo] bucket placement (buckets per schedule): {placement}")
   if not args.no_warmup and misses_during:
     print(f"[serve_mmo] WARNING: {misses_during} compiles during the "
           f"measured window (cold buckets)")

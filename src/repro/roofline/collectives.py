@@ -33,6 +33,24 @@ _COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def ring_traffic_bytes(kind: str, nbytes: float, group_size: int) -> float:
+  """Per-device ring-model traffic for one collective moving ``nbytes``.
+
+  The single source of the formulas in the module docstring — shared by the
+  HLO walker below and the tuning layer's sharded roofline prior
+  (tuning.cost_table.sharded_prior_seconds), so the measured-HLO and analytic
+  collective models cannot drift apart.
+  """
+  n = max(group_size, 1)
+  if kind == "all-reduce":
+    return 2.0 * (n - 1) / n * nbytes
+  if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+    return (n - 1) / n * nbytes
+  if kind == "collective-permute":
+    return float(nbytes)
+  raise ValueError(f"unknown collective kind {kind!r}; one of {_COLL_KINDS}")
+
+
 def _shape_bytes(text: str) -> int:
   """Sum tensor bytes over every dtype[shape] group in a type string."""
   total = 0
@@ -72,15 +90,7 @@ def collective_bytes(hlo_text: str) -> dict:
     if kind is None or optype.endswith("-done"):
       continue
     ty = m.group(1)
-    n = _group_size(line)
-    b = _shape_bytes(ty)
-    if kind == "all-reduce":
-      traffic = 2.0 * (n - 1) / max(n, 1) * b
-    elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
-      traffic = (n - 1) / max(n, 1) * b
-    else:  # collective-permute
-      traffic = float(b)
-    out[kind] += traffic
+    out[kind] += ring_traffic_bytes(kind, _shape_bytes(ty), _group_size(line))
     out[f"count:{kind}"] += 1
   out["total"] = sum(v for k, v in out.items()
                      if not k.startswith("count:") and k != "total")

@@ -87,11 +87,15 @@ class MMOFuture:
     return self._event.is_set()
 
   def result(self, timeout: Optional[float] = None) -> MMOResult:
+    """Engine-bug paths (a request the scheduler lost) surface as a
+    RuntimeError from ``_drive``; only a genuinely elapsed ``timeout``
+    raises TimeoutError."""
     if not self._event.is_set():
       self._engine._drive(self, timeout)
     if not self._event.is_set():
+      within = "the allotted time" if timeout is None else f"{timeout:g}s"
       raise TimeoutError(
-          f"request {self.request.request_id} not done within {timeout}s")
+          f"request {self.request.request_id} not done within {within}")
     if self._error is not None:
       raise self._error
     return self._result

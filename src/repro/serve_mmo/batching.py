@@ -124,13 +124,38 @@ def abstract_batch(key: BucketKey, batch: int):
 
 
 def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
-                  interpret: Optional[bool] = None):
+                  interpret: Optional[bool] = None,
+                  mesh=None, schedule: str = "local"):
   """Pure jax function over the stacked operands for one bucket.
 
   ``backend``/``block`` are the bucket's dispatch decision (resolved once at
   batch-build time by the engine and baked into the executable-cache key), so
   a mixed-backend steady state replays stored executables and never retraces.
+
+  ``schedule`` places the bucket: ``"local"`` runs the single-device batched
+  entry points; a name from ``core.distributed.SCHEDULES`` runs the same
+  contraction sharded over ``mesh`` — kspan/SUMMA/ring shard the problem
+  axes, ``"dp"`` shards the request axis (independent per-device work, and
+  for closures independent per-device fixpoints) — with ``backend``
+  selecting each shard's local contraction path and the per-request
+  ``k_valid``/``valid_n`` ragged masks carried through.
   """
+  sharded = schedule != "local"
+  if sharded:
+    if mesh is None:
+      raise ValueError(f"schedule {schedule!r} needs a mesh")
+    from repro.core import distributed as dist
+
+    def contract(a, b, c, op, kv):
+      return dist.mmo_sharded_batched(a, b, c, op=op, schedule=schedule,
+                                      mesh=mesh, backend=backend, block=block,
+                                      interpret=interpret, k_valid=kv)
+  else:
+
+    def contract(a, b, c, op, kv):
+      return mmo_batched(a, b, c, op=op, backend=backend, block=block,
+                         interpret=interpret, k_valid=kv)
+
   if key.kind == "mmo":
     (has_c,) = key.params
 
@@ -138,13 +163,28 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
       a, b = args[0], args[1]
       c = args[2] if has_c else None
       kv = args[2 + has_c]
-      return mmo_batched(a, b, c, op=key.op, backend=backend, block=block,
-                         interpret=interpret, k_valid=kv)
+      return contract(a, b, c, key.op, kv)
 
     return fn
 
   if key.kind == "closure":
     (algorithm,) = key.params
+
+    if sharded:
+      # whole-solver entry point: for dp each device runs an *independent*
+      # fixpoint over its own requests (straggler decoupling); for the
+      # contraction schedules it swaps the squaring step for the mesh one
+
+      def fn(adj, valid):
+        return dist.sharded_closure_batched(adj, op=key.op,
+                                            algorithm=algorithm, mesh=mesh,
+                                            schedule=schedule,
+                                            backend=backend, block=block,
+                                            interpret=interpret,
+                                            valid_n=valid)
+
+      return fn
+
     solver = (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
               else cl_mod.batched_bellman_ford_closure)
 
@@ -163,9 +203,8 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
     (k,) = key.params
 
     def fn(q, ref, valid):
-      d2 = mmo_batched(q, jnp.swapaxes(ref, -1, -2), op="addnorm",
-                       backend=backend, block=block, interpret=interpret,
-                       k_valid=None)  # feature dim is never padded raggedly
+      d2 = contract(q, jnp.swapaxes(ref, -1, -2), None, "addnorm",
+                    None)  # feature dim is never padded raggedly
       # mask padded corpus rows to +inf so they lose every top-k comparison
       row_ok = jnp.arange(d2.shape[-1]) < valid[:, None]  # (R, rb)
       d2 = jnp.where(row_ok[:, None, :], d2, jnp.inf)

@@ -82,21 +82,45 @@ class MMOEngine:
   bucket and baked into the executable-cache key, so a mixed-backend steady
   state replays one stored executable per (bucket, batch) and never retraces
   even if the global table is later mutated.
+
+  With a ``mesh``, a second routing layer places each bucket: batches whose
+  per-request contraction exceeds ``shard_flops`` execute as a batched
+  distributed schedule (core.distributed SUMMA / kspan / ring) across the
+  mesh, smaller buckets keep the single-device path.  ``schedule="auto"``
+  picks the schedule from the cost table's mesh rows (roofline-prior fallback
+  when unmeasured); a schedule name pins it.  The (schedule, mesh) placement
+  is part of the executable-cache key, so sharded and local executables never
+  collide and sharded steady state replays stored executables too.
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
                min_bucket: int = MIN_BUCKET,
                interpret: Optional[bool] = None,
-               cost_table=None):
+               cost_table=None, mesh=None, schedule: str = "auto",
+               shard_flops: float = 1e8):
+    from repro.core import distributed as dist
+    valid_schedules = ("auto", "local") + dist.SCHEDULES
+    if schedule not in valid_schedules:
+      raise ValueError(f"unknown schedule {schedule!r}; one of "
+                       f"{valid_schedules}")
+    if mesh is None and schedule not in ("auto", "local"):
+      raise ValueError(f"schedule {schedule!r} needs a mesh")
     self.backend = backend
     self.interpret = interpret
     self.cost_table = cost_table
+    self.mesh = mesh
+    self.schedule = schedule
+    self.shard_flops = float(shard_flops)
+    self._mesh_sig = None if mesh is None else tuple(
+        (a, int(mesh.shape[a])) for a in mesh.axis_names)
     self._decisions: dict = {}  # BucketKey → (backend, block cfg)
+    self._schedules: dict = {}  # BucketKey → 'local' | distributed schedule
     self.scheduler = FifoBucketScheduler(min_bucket=min_bucket,
                                          max_batch=max_batch)
     self.cache = ExecutableCache()
     self._lock = threading.RLock()
     self._work = threading.Condition(self._lock)
+    self._idle = threading.Condition(self._lock)  # signaled: _pending empty
     self._records: list[RequestRecord] = []
     self._batches = 0
     self._next_id = 0
@@ -135,20 +159,89 @@ class MMOEngine:
     """(backend, block cfg) for one bucket — the dispatch decision.
 
     Memoized: the first resolution a bucket ever gets is the one it keeps
-    for this engine's lifetime (stable executable-cache keys).
+    for this engine's lifetime (stable executable-cache keys).  The whole
+    check-resolve-memoize sequence holds the engine lock: ``prewarm`` on the
+    caller thread and ``step`` on the background loop race here, and an
+    unsynchronized dict could memoize two divergent decisions if the global
+    cost table moved between their resolutions.
     """
-    dec = self._decisions.get(key)
-    if dec is None:
-      if self.backend != "auto":
-        dec = (self.backend, ())
-      else:
-        from repro.tuning import dispatch as _dispatch
-        m, k, n = contract_shape(key)
-        d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
-                              table=self.cost_table)
-        dec = (d.backend, d.cfg)
-      self._decisions[key] = dec
-    return dec
+    with self._lock:
+      dec = self._decisions.get(key)
+      if dec is None:
+        if self.backend != "auto":
+          dec = (self.backend, ())
+        else:
+          from repro.tuning import dispatch as _dispatch
+          m, k, n = contract_shape(key)
+          d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
+                                table=self.cost_table)
+          dec = (d.backend, d.cfg)
+        self._decisions[key] = dec
+      return dec
+
+  def resolve_schedule(self, key) -> str:
+    """Mesh placement for one bucket: 'local' or a distributed schedule name.
+
+    Memoized under the engine lock like ``resolve_backend`` (stable cache
+    keys); without a mesh every bucket is 'local'.
+    """
+    with self._lock:
+      sched = self._schedules.get(key)
+      if sched is None:
+        sched = self._route(key)
+        self._schedules[key] = sched
+      return sched
+
+  def _route(self, key) -> str:
+    """The size-threshold router: buckets whose per-request contraction
+    exceeds ``shard_flops`` go to the mesh, the rest stay local.  Above the
+    threshold, a pinned ``schedule`` is used as-is (when it divides onto the
+    mesh); ``"auto"`` asks the cost table's mesh rows (roofline-prior
+    fallback) whether a distributed schedule actually beats the local path.
+    Closure buckets only consider dp (independent per-device fixpoints — the
+    straggler-decoupling schedule) and SUMMA (the one contraction schedule
+    whose iterate stays sharded in place across squarings)."""
+    if self.mesh is None or self.schedule == "local":
+      return "local"
+    m, k, n = contract_shape(key)
+    if 2.0 * m * k * n < self.shard_flops:
+      return "local"
+    from repro.core import distributed as dist
+    fits = [s for s in dist.SCHEDULES
+            if dist.schedule_fits(s, m, k, n, self.mesh)]
+    if key.kind == "closure":
+      fits = [s for s in fits if s in ("dp", "summa")]
+    if self.schedule != "auto":
+      return self.schedule if self.schedule in fits else "local"
+    if not fits:
+      return "local"
+    from repro.tuning import dispatch as _dispatch
+    mesh_dims = tuple(s for _, s in self._mesh_sig)
+    d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
+                          table=self.cost_table, mesh_shape=mesh_dims,
+                          schedules=tuple(fits))
+    return d.backend if d.backend in fits else "local"
+
+  def resolve_placement(self, key, rb: Optional[int] = None) -> tuple:
+    """(backend, block cfg, schedule) — the full per-bucket decision.  The
+    backend doubles as each shard's local contraction path when the bucket
+    is routed to the mesh.  With ``rb`` (the padded batch size), dp falls
+    back to 'local' for batches that don't divide over the mesh's devices —
+    a per-(bucket, rb) refinement, deterministic because rb is part of the
+    executable-cache key."""
+    backend, block = self.resolve_backend(key)
+    schedule = self.resolve_schedule(key)
+    if (schedule == "dp" and rb is not None
+        and rb % self.mesh.size != 0):
+      schedule = "local"
+    return backend, block, schedule
+
+  def _exec_key(self, key, rb: int, backend: str, block: tuple,
+                schedule: str) -> tuple:
+    """Executable-cache key: placement included, so a bucket's sharded and
+    local programs (or programs for two different meshes) never collide."""
+    return (key, rb, backend, block, schedule,
+            None if schedule == "local" else self._mesh_sig)
 
   def step(self) -> int:
     """Schedule + execute one bucket batch; returns #requests completed."""
@@ -164,12 +257,12 @@ class MMOEngine:
       # fill the padded batch slots with copies of the last request — wasted
       # compute bounded at 2×, in exchange for a bounded executable set
       stacked = batching.stack_batch(key, reqs + [reqs[-1]] * (rb - len(reqs)))
-      backend, block = self.resolve_backend(key)
-      exec_key = (key, rb, backend, block)
+      backend, block, schedule = self.resolve_placement(key, rb)
       compiled = self.cache.get_or_compile(
-          exec_key,
+          self._exec_key(key, rb, backend, block, schedule),
           lambda: batching.make_batch_fn(key, backend=backend, block=block,
-                                         interpret=self.interpret),
+                                         interpret=self.interpret,
+                                         mesh=self.mesh, schedule=schedule),
           stacked)
       out = compiled(*stacked)
       results = batching.split_results(key, reqs, out)
@@ -180,6 +273,8 @@ class MMOEngine:
           fut = self._pending.pop(r.request_id, None)
           if fut is not None:
             fut._fail(e)
+        if not self._pending:
+          self._idle.notify_all()
       return 0
     completed_s = time.perf_counter()
     with self._lock:
@@ -194,6 +289,8 @@ class MMOEngine:
         fut = self._pending.pop(r.request_id, None)
         if fut is not None:
           fut._fulfill(res)
+      if not self._pending:
+        self._idle.notify_all()
     return len(reqs)
 
   def run_until_idle(self) -> int:
@@ -205,21 +302,45 @@ class MMOEngine:
         return total
       total += done
 
+  def _check_dropped(self, fut: MMOFuture):
+    """Raise if the scheduler lost this request: still pending, but neither
+    queued (scheduler fully drained) nor inside an executing batch.  Pop +
+    fulfill and pick + mark-inflight are each atomic under the engine lock,
+    so this three-way state read is consistent — a positive is a real
+    engine bug, never a request merely waiting behind other buckets."""
+    rid = fut.request.request_id
+    with self._lock:
+      dropped = (rid in self._pending and rid not in self._inflight
+                 and len(self.scheduler) == 0)
+    if dropped:
+      raise RuntimeError(
+          f"request {rid} ({fut.request.kind}/{fut.request.op}) was "
+          f"dropped: the queue drained without completing it — engine bug")
+
   def _drive(self, fut: MMOFuture, timeout: Optional[float]):
     """Future.result() plumbing: wait on the loop, or step synchronously."""
-    if self._thread is not None and self._thread.is_alive():
-      fut._event.wait(timeout)
-      return
     deadline = None if timeout is None else time.perf_counter() + timeout
+    while (self._thread is not None and self._thread.is_alive()
+           and not fut.done()):
+      # bounded waits, re-checking for a scheduler-lost request each lap —
+      # result(timeout=None) must surface the engine bug as a RuntimeError,
+      # not block forever on an event nobody will ever set
+      self._check_dropped(fut)
+      if deadline is not None and time.perf_counter() > deadline:
+        return
+      wait = 0.05 if deadline is None else max(
+          0.0, min(0.05, deadline - time.perf_counter()))
+      if fut._event.wait(wait):
+        return
+    # no background loop (or it died mid-wait): step synchronously
     while not fut.done():
       if deadline is not None and time.perf_counter() > deadline:
         return
       if self.step() == 0 and not fut.done():
-        with self._lock:
-          executing = fut.request.request_id in self._inflight
-        if not executing:
-          return  # queue drained without this request — engine-level bug
-        # another thread's step() holds this request's batch — wait for it
+        self._check_dropped(fut)
+        # another thread's step() holds (or just finished) this request's
+        # batch, or its bucket sits behind one that just failed — wait for
+        # the completion event, then loop back into step()
         wait = 0.005 if deadline is None else max(
             0.0, min(0.005, deadline - time.perf_counter()))
         fut._event.wait(wait)
@@ -235,13 +356,14 @@ class MMOEngine:
             for req in sample_reqs}
     before = self.cache.misses
     for key in seen:
-      backend, block = self.resolve_backend(key)
       rb = 1
       while True:
+        backend, block, schedule = self.resolve_placement(key, rb)
         self.cache.get_or_compile(
-            (key, rb, backend, block),
-            lambda: batching.make_batch_fn(key, backend=backend, block=block,
-                                           interpret=self.interpret),
+            self._exec_key(key, rb, backend, block, schedule),
+            lambda s=schedule: batching.make_batch_fn(
+                key, backend=backend, block=block, interpret=self.interpret,
+                mesh=self.mesh, schedule=s),
             batching.abstract_batch(key, rb))
         if rb >= self.scheduler.max_batch:
           break
@@ -265,8 +387,12 @@ class MMOEngine:
     loop is not running, drain synchronously instead of spinning)."""
     if drain:
       if self._thread is not None and self._thread.is_alive():
-        while self.pending() and self._thread.is_alive():
-          time.sleep(0.001)
+        # step() notifies _idle the moment _pending empties, so drain wakes
+        # immediately and burns no CPU; the timeout is only a liveness
+        # backstop should the serving thread die without notifying.
+        with self._idle:
+          while self._pending and self._thread.is_alive():
+            self._idle.wait(timeout=0.5)
       else:
         self.run_until_idle()
     with self._work:

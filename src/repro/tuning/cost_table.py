@@ -91,12 +91,21 @@ class CostEntry:
   source: str  # 'measured' | 'prior'
 
 
-def prior_seconds(op: str, shape: Sequence[int], dtype, backend: str,
-                  cfg: tuple = ()) -> float:
-  """Analytic roofline prior for one point (v5e constants, seconds)."""
-  sr = sr_mod.get(op)
-  m, k, n = bucket_shape(tuple(shape))
-  itemsize = np.dtype(dtype).itemsize
+# Distributed-schedule arms the table can hold rows for (core.distributed
+# batched schedules); their cfg column is the mesh shape, e.g. '2x4'.
+SCHEDULE_ARMS = ("dp", "kspan", "summa", "ring")
+
+# Per-shard program launch + shard_map sync cost charged to the dp arm: dp
+# moves no bytes, so without it the model would shard every batch down to
+# trivially small contractions where launch overhead actually dominates.
+DP_OVERHEAD_S = 50e-6
+
+
+def _local_point_seconds(sr, m: int, k: int, n: int, itemsize: int,
+                         backend: str, cfg: tuple) -> float:
+  """Roofline seconds for one single-device (m, k, n) contraction — the
+  shared core of ``prior_seconds`` and the per-shard compute term of
+  ``sharded_prior_seconds`` (unbucketed: sharded shapes are already exact)."""
   flops = 2.0 * m * k * n
   bytes_ = itemsize * (m * k + k * n) + 4 * m * n  # fp32 out
   t_mem = bytes_ / hw.HBM_BW
@@ -120,6 +129,63 @@ def prior_seconds(op: str, shape: Sequence[int], dtype, backend: str,
     grid = math.ceil(m / bm) * math.ceil(n / bn) * math.ceil(k / bk)
     t += grid * _PALLAS_STEP_OVERHEAD_S
   return t
+
+
+def prior_seconds(op: str, shape: Sequence[int], dtype, backend: str,
+                  cfg: tuple = ()) -> float:
+  """Analytic roofline prior for one point (v5e constants, seconds)."""
+  sr = sr_mod.get(op)
+  m, k, n = bucket_shape(tuple(shape))
+  return _local_point_seconds(sr, m, k, n, np.dtype(dtype).itemsize,
+                              backend, cfg)
+
+
+def sharded_prior_seconds(op: str, shape: Sequence[int], dtype,
+                          schedule: str, mesh_shape: Sequence[int], *,
+                          backend: str = "xla") -> float:
+  """Analytic prior for one distributed schedule on a (rows, cols) mesh:
+  per-shard roofline compute + ring-model collective traffic over one ICI
+  link (formulas shared with roofline.collectives.ring_traffic_bytes).
+
+  This is the fallback ``dispatch.resolve`` compares against the local prior
+  when the table has no measured mesh row — the model that decides whether
+  the collective is worth it before anyone has benchmarked the mesh.
+  """
+  from repro.roofline.collectives import ring_traffic_bytes
+  sr = sr_mod.get(op)
+  m, k, n = bucket_shape(tuple(shape))
+  dims = tuple(int(d) for d in mesh_shape)
+  rows, cols = dims[0], dims[-1]
+  itemsize = np.dtype(dtype).itemsize
+
+  if schedule == "dp":
+    # requests sharded over every device: per-device work is the whole
+    # contraction over 1/P of the batch, no collectives — the arm's cost is
+    # throughput-normalized like the others (whole-bucket work over P)
+    ndev = 1
+    for d in dims:
+      ndev *= max(d, 1)
+    return (_local_point_seconds(sr, m, k, n, itemsize, backend, ()) / ndev
+            + DP_OVERHEAD_S)
+  if schedule == "kspan":
+    t = _local_point_seconds(sr, m, max(k // cols, 1), n, itemsize,
+                             backend, ())
+    coll = ring_traffic_bytes("all-reduce", 4.0 * m * n, cols)
+  elif schedule == "summa":
+    t = _local_point_seconds(sr, max(m // rows, 1), k, max(n // cols, 1),
+                             itemsize, backend, ())
+    coll = (ring_traffic_bytes("all-gather",
+                               itemsize * (m // max(rows, 1)) * k, cols)
+            + ring_traffic_bytes("all-gather",
+                                 itemsize * k * (n // max(cols, 1)), rows))
+  elif schedule == "ring":
+    t = cols * _local_point_seconds(sr, m, max(k // cols, 1),
+                                    max(n // cols, 1), itemsize, backend, ())
+    coll = cols * ring_traffic_bytes(
+        "collective-permute", itemsize * max(k // cols, 1) * n, cols)
+  else:
+    raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULE_ARMS}")
+  return t + coll / hw.ICI_BW_PER_LINK
 
 
 class CostTable:

@@ -15,11 +15,13 @@ need isolation (the engine, tests) pass ``table=`` explicitly instead.
 from __future__ import annotations
 
 import contextlib
+import math
 import os
 import threading
 from typing import Optional, Sequence, Union
 
-from repro.tuning.cost_table import CostTable, Decision
+from repro.tuning.cost_table import (SCHEDULE_ARMS, CostTable, Decision,
+                                     prior_seconds, sharded_prior_seconds)
 
 ENV_VAR = "REPRO_COST_TABLE"
 DEFAULT_BACKEND = "xla"
@@ -77,11 +79,56 @@ def use_cost_table(table: Union[CostTable, str, None]):
 
 def resolve(op: str, m: int, k: int, n: int, dtype, *,
             table: Optional[CostTable] = None,
-            backends: Optional[Sequence[str]] = None) -> Decision:
-  """Dispatch decision for one call signature (raw or bucketed shape)."""
+            backends: Optional[Sequence[str]] = None,
+            mesh_shape: Optional[Sequence[int]] = None,
+            schedules: Optional[Sequence[str]] = None) -> Decision:
+  """Dispatch decision for one call signature (raw or bucketed shape).
+
+  With ``mesh_shape`` (a (rows, cols) device-mesh shape), distributed
+  schedule arms compete too: the returned Decision's ``backend`` may then be
+  a schedule name from ``SCHEDULE_ARMS`` with the mesh shape as its ``cfg``.
+  Measured mesh rows in the table (backend = schedule, cfg = mesh shape) are
+  compared against the local choice directly; when the mesh is unmeasured,
+  the sharded roofline prior competes against the *local prior* — model vs
+  model, never a v5e model against a live-device measurement — so an
+  untuned mesh only wins when the collective model says it should.
+  ``schedules`` restricts which arms may compete (e.g. closures pass
+  ('dp', 'summa') — independent per-device fixpoints, or the one contraction
+  schedule that keeps C sharded in place).
+  """
   table = table if table is not None else get_cost_table()
-  if table is not None:
-    choice = table.best(op, (m, k, n), dtype, backends=backends)
-    if choice is not None:
-      return choice
-  return Decision(DEFAULT_BACKEND, (), float("inf"), "default")
+  local = table.best(op, (m, k, n), dtype, backends=backends) \
+      if table is not None else None
+  if local is None:
+    local = Decision(DEFAULT_BACKEND, (), float("inf"), "default")
+  if mesh_shape is None:
+    return local
+
+  dims = tuple(int(d) for d in mesh_shape)
+  arms = []
+  for sched in (schedules if schedules is not None else SCHEDULE_ARMS):
+    if sched not in SCHEDULE_ARMS:
+      raise ValueError(f"unknown schedule {sched!r}; one of {SCHEDULE_ARMS}")
+    entry = table.lookup(op, (m, k, n), dtype, sched, dims) \
+        if table is not None else None
+    if entry is not None:
+      arms.append(Decision(sched, dims, entry.seconds, entry.source))
+    else:
+      arms.append(Decision(
+          sched, dims,
+          sharded_prior_seconds(op, (m, k, n), dtype, sched, dims), "prior"))
+  if not arms:
+    return local
+  # measured-beats-prior inside the sharded pool too: an unmeasured arm's
+  # (idealized-hardware) prior must not shadow a row someone benchmarked
+  measured = [a for a in arms if a.source == "measured"]
+  best_sharded = min(measured or arms, key=lambda a: a.seconds)
+
+  # like-for-like comparison: a sharded prior beats the local *prior*, a
+  # sharded measurement beats whatever the local arm actually holds
+  local_s = local.seconds
+  if best_sharded.source == "prior" and local.source != "prior":
+    local_s = prior_seconds(op, (m, k, n), dtype, local.backend, local.cfg)
+  if not math.isfinite(local_s):  # 'default' local: no table at all
+    local_s = prior_seconds(op, (m, k, n), dtype, local.backend, local.cfg)
+  return best_sharded if best_sharded.seconds < local_s else local

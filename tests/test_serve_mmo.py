@@ -1,4 +1,6 @@
 """MMO serving engine: batched semiring execution, scheduler, cache, e2e."""
+import time
+
 import numpy as np
 import pytest
 
@@ -356,3 +358,119 @@ def test_request_validation():
     knn_request(np.zeros((2, 3)), np.zeros((4, 3)), k=9)  # k > corpus
   with pytest.raises(ValueError):
     closure_request(np.zeros((3, 3)), op="nope")  # unknown ring
+
+
+# ---------------------------------------------------------------------------
+# engine concurrency seams (the PR-3 bugfix sweep)
+# ---------------------------------------------------------------------------
+
+
+def test_dropped_request_raises_runtime_error_not_timeout():
+  """A request the scheduler loses is an engine bug: result() must say so
+  (naming the request), not claim it timed out 'within Nones'."""
+  eng = MMOEngine(backend="xla")
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+  eng.scheduler._buckets.clear()  # simulate the engine losing the request
+  with pytest.raises(RuntimeError, match=rf"request {fut.request.request_id}"
+                                         r".*dropped"):
+    fut.result()
+
+
+def test_dropped_request_raises_in_background_loop_mode():
+  """Same engine bug with the background loop running: result(timeout=None)
+  must raise instead of blocking forever on an event nobody will set."""
+  eng = MMOEngine(backend="xla")
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+  eng.scheduler._buckets.clear()  # lose it before the loop can serve it
+  eng.start()
+  try:
+    with pytest.raises(RuntimeError, match=r"dropped"):
+      fut.result()
+  finally:
+    eng.stop(drain=False)
+
+
+def test_timeout_message_formats_seconds():
+  eng = MMOEngine(backend="xla")
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+  # a zero timeout expires before the first step; the message must carry a
+  # readable duration (the old f-string printed 'within Nones' for None)
+  with pytest.raises(TimeoutError, match=r"not done within 0s"):
+    fut.result(timeout=0.0)
+  assert fut.result().value.shape == (10, 10)  # still servable afterwards
+
+
+def test_resolve_backend_is_threadsafe(monkeypatch):
+  """prewarm() on the caller thread races step() on the loop thread into
+  resolve_backend; the memoization must be atomic so every caller sees one
+  decision even when the cost table's answer changes between calls."""
+  import threading as th
+  from repro.tuning import Decision
+  from repro.tuning import dispatch as dsp
+
+  calls = []
+
+  def slow_resolve(op, m, k, n, dtype, **kw):
+    calls.append(None)
+    time.sleep(0.005)  # widen the check-then-memoize window
+    return Decision(f"backend-{len(calls)}", (), 1.0, "measured")
+
+  monkeypatch.setattr(dsp, "resolve", slow_resolve)
+  eng = MMOEngine(backend="auto")
+  key = request_bucket(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+
+  out, barrier = [], th.Barrier(8)
+
+  def hammer():
+    barrier.wait()
+    for _ in range(10):
+      out.append(eng.resolve_backend(key))
+
+  threads = [th.Thread(target=hammer) for _ in range(8)]
+  for t in threads:
+    t.start()
+  for t in threads:
+    t.join()
+  assert len(set(out)) == 1, f"divergent memoized decisions: {set(out)}"
+  assert len(calls) == 1  # resolved exactly once, under the engine lock
+
+
+def test_stop_drain_wakes_on_empty_pending():
+  """stop(drain=True) must return promptly once the loop empties the queue
+  (condition-variable wait, not a sleep-poll) and leave everything done."""
+  eng = MMOEngine(backend="xla", max_batch=4)
+  eng.start()
+  futs = [eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=i)))
+          for i in range(8)]
+  eng.stop(drain=True)
+  assert eng.pending() == 0
+  assert all(f.done() for f in futs)
+  assert all(f.result().value.shape == (10, 10) for f in futs)
+
+
+def test_batch_failure_fails_futures_and_keeps_serving(monkeypatch):
+  """step()'s except branch: a poisoned batch fails every future in it,
+  leaves _inflight/_pending clean, and the engine keeps serving."""
+  from repro.serve_mmo import batching as batching_mod
+
+  eng = MMOEngine(backend="xla", max_batch=4)
+  futs = [eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=i)))
+          for i in range(3)]
+
+  boom = RuntimeError("poisoned operands")
+  real_stack = batching_mod.stack_batch
+  monkeypatch.setattr(batching_mod, "stack_batch",
+                      lambda *a, **kw: (_ for _ in ()).throw(boom))
+  assert eng.step() == 0  # the whole batch fails, step reports 0 completions
+  assert eng._inflight == set() and eng.pending() == 0
+  for f in futs:
+    assert f.done()
+    with pytest.raises(RuntimeError, match="poisoned operands"):
+      f.result()
+
+  monkeypatch.setattr(batching_mod, "stack_batch", real_stack)
+  ok = eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=9)))
+  assert eng.run_until_idle() == 1
+  ref, _ = solvers.apsp(graphs.weighted_digraph(12, 0.3, seed=9))
+  np.testing.assert_allclose(ok.result().value, np.asarray(ref), atol=1e-5)
+  assert eng._inflight == set() and eng.pending() == 0
