@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
   §Dispatch  dispatch_bench (auto vs fixed backends → BENCH_dispatch.json)
   §Sharding  shard_bench (local vs distributed schedules → BENCH_shard.json;
              re-execs itself with 8 fake host devices on CPU)
+  §QoS       qos_bench (deadline vs FIFO under bulk interference, admission
+             bounding, scheduler pick cost → BENCH_qos.json)
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ import traceback
 
 def main() -> None:
   from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
-                          microbench_shapes, microbench_square,
+                          microbench_shapes, microbench_square, qos_bench,
                           roofline_table, shard_bench, sparse_bench)
   print("name,us_per_call,derived")
   suites = (
@@ -30,6 +32,7 @@ def main() -> None:
       ("roofline", roofline_table.main),
       ("dispatch", dispatch_bench.main),
       ("shard", shard_bench.main),
+      ("qos", qos_bench.main),
   )
   failed = []
   for name, fn in suites:

@@ -9,6 +9,11 @@
         python -m repro.launch.serve_mmo --mesh 2,4 --schedule dp \
         --sizes 24,96,200 --shard-flops 3e7 --rate 20
 
+    # QoS serving: deadline policy + admission caps + live metrics every 1s
+    PYTHONPATH=src python -m repro.launch.serve_mmo --policy deadline \
+        --deadline-s 0.25 --max-queue 256 --tenant-quota 64 \
+        --metrics-every 1 --rate 80 --duration 5
+
 Generates a Poisson arrival stream of mixed SIMD² problems (APSP, KNN,
 reachability, raw mmo at several sizes), submits each request at its arrival
 time against the engine's background serving loop, and reports throughput
@@ -24,31 +29,46 @@ kspan / ring per ``--schedule``), the rest stay single-device.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import threading
 import time
 
 import numpy as np
 
 from repro.apps import graphs
-from repro.serve_mmo import (MMOEngine, apsp_request, knn_request,
-                             mmo_request, reachability_request)
+from repro.serve_mmo import (DeadlineExceededError, MMOEngine, RejectedError,
+                             apsp_request, knn_request, mmo_request,
+                             reachability_request)
+
+TENANTS = ("alpha", "beta", "gamma")
 
 
-def synthesize_request(rng: np.random.Generator, sizes):
-  """One random problem from the mixed APSP/KNN/reachability/mmo workload."""
+def synthesize_request(rng: np.random.Generator, sizes, *,
+                       deadline_s=None, deadline_frac: float = 0.0):
+  """One random problem from the mixed APSP/KNN/reachability/mmo workload.
+
+  Tenants cycle through a fixed trio; with ``deadline_s``, a
+  ``deadline_frac`` share of requests is deadline-tagged at priority 1 —
+  the latency-sensitive slice the deadline policy protects.
+  """
   kind = rng.choice(("apsp", "knn", "reach", "mmo"))
   n = int(rng.choice(sizes))
   seed = int(rng.integers(0, 2 ** 31))
+  qos = {"tenant": TENANTS[int(rng.integers(0, len(TENANTS)))]}
+  if deadline_s is not None and rng.random() < deadline_frac:
+    qos.update(deadline_s=float(deadline_s), priority=1)
   if kind == "apsp":
-    return apsp_request(graphs.weighted_digraph(n, 0.3, seed=seed))
+    return apsp_request(graphs.weighted_digraph(n, 0.3, seed=seed), **qos)
   if kind == "reach":
-    return reachability_request(graphs.boolean_digraph(n, 0.1, seed=seed))
+    return reachability_request(graphs.boolean_digraph(n, 0.1, seed=seed),
+                                **qos)
   if kind == "knn":
     ref, qry = graphs.knn_points(4 * n, n, 16, seed=seed)
-    return knn_request(qry, ref, k=min(8, 4 * n))
+    return knn_request(qry, ref, k=min(8, 4 * n), **qos)
   a = rng.standard_normal((n, n)).astype(np.float32)
   b = rng.standard_normal((n, n)).astype(np.float32)
-  return mmo_request(a, b, op="minplus")
+  return mmo_request(a, b, op="minplus", **qos)
 
 
 def warmup(engine: MMOEngine, rng: np.random.Generator, sizes, n: int = 40):
@@ -93,6 +113,27 @@ def main(argv=None):
                   help="with --backend auto: measure this workload's buckets "
                        "on the live device before serving (and persist to "
                        "--cost-table if given)")
+  ap.add_argument("--policy", default="fifo",
+                  choices=("fifo", "deadline", "fair"),
+                  help="scheduling policy: fifo (oldest head first), "
+                       "deadline (earliest feasible deadline + priority "
+                       "tiers), fair (weighted round-robin across tenants)")
+  ap.add_argument("--max-queue", type=int, default=None,
+                  help="admission: reject once this many requests are queued")
+  ap.add_argument("--tenant-quota", type=int, default=None,
+                  help="admission: per-tenant in-flight request cap")
+  ap.add_argument("--max-backlog-s", type=float, default=None,
+                  help="admission: reject once the queue's predicted drain "
+                       "time (cost-table seconds) exceeds this")
+  ap.add_argument("--deadline-s", type=float, default=None,
+                  help="tag a --deadline-frac share of traffic with this "
+                       "latency budget (priority 1); late requests expire")
+  ap.add_argument("--deadline-frac", type=float, default=0.25,
+                  help="share of traffic carrying --deadline-s (default .25)")
+  ap.add_argument("--metrics-every", type=float, default=None, metavar="SECS",
+                  help="print a live metrics snapshot (rolling p50/p99 per "
+                       "bucket, queue depth, admission state) every SECS "
+                       "while serving")
   args = ap.parse_args(argv)
 
   try:
@@ -154,7 +195,10 @@ def main(argv=None):
   engine = MMOEngine(backend=args.backend, max_batch=args.max_batch,
                      min_bucket=args.min_bucket, cost_table=cost_table,
                      mesh=mesh, schedule=args.schedule if mesh else "auto",
-                     shard_flops=args.shard_flops)
+                     shard_flops=args.shard_flops,
+                     policy=args.policy, max_queue=args.max_queue,
+                     tenant_quota=args.tenant_quota,
+                     max_backlog_s=args.max_backlog_s)
 
   if not args.no_warmup:
     t0 = time.perf_counter()
@@ -166,8 +210,18 @@ def main(argv=None):
   # serving path.
   arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                        int(args.rate * args.duration)))
-  reqs = [synthesize_request(rng, sizes) for _ in arrivals]
+  reqs = [synthesize_request(rng, sizes, deadline_s=args.deadline_s,
+                             deadline_frac=args.deadline_frac)
+          for _ in arrivals]
   misses_before = engine.cache.misses
+
+  ticker_stop = threading.Event()
+  if args.metrics_every:
+    def tick():
+      while not ticker_stop.wait(args.metrics_every):
+        print(f"[serve_mmo][metrics] "
+              f"{json.dumps(engine.metrics_snapshot(), default=float)}")
+    threading.Thread(target=tick, name="mmo-metrics", daemon=True).start()
 
   engine.start()
   t0 = time.perf_counter()
@@ -177,22 +231,37 @@ def main(argv=None):
     if t_arr > now:
       time.sleep(t_arr - now)
     futures.append(engine.submit(req))
+  outcomes = {"done": 0, "rejected": 0, "expired": 0, "failed": 0}
   for f in futures:
-    f.result(timeout=600)
+    try:
+      f.result(timeout=600)
+      outcomes["done"] += 1
+    except RejectedError:
+      outcomes["rejected"] += 1
+    except DeadlineExceededError:
+      outcomes["expired"] += 1
+    except Exception:  # noqa: BLE001 — tally, keep draining
+      outcomes["failed"] += 1
   wall = time.perf_counter() - t0
   engine.stop()
+  ticker_stop.set()
 
   st = engine.stats()
   misses_during = engine.cache.misses - misses_before
-  print(f"[serve_mmo] backend={args.backend} rate={args.rate}/s "
-        f"duration={args.duration}s offered={len(futures)}")
+  print(f"[serve_mmo] backend={args.backend} policy={args.policy} "
+        f"rate={args.rate}/s duration={args.duration}s "
+        f"offered={len(futures)}")
   print(f"[serve_mmo] served {st.completed} problems in {wall:.2f}s "
-        f"({st.completed / wall:.1f} problems/s)")
-  print(f"[serve_mmo] latency p50={st.percentile(50) * 1e3:.1f}ms "
-        f"p90={st.percentile(90) * 1e3:.1f}ms "
-        f"p99={st.percentile(99) * 1e3:.1f}ms")
+        f"({st.completed / wall:.1f} problems/s) outcomes={outcomes}")
+  if st.completed:
+    print(f"[serve_mmo] latency p50={st.percentile(50) * 1e3:.1f}ms "
+          f"p90={st.percentile(90) * 1e3:.1f}ms "
+          f"p99={st.percentile(99) * 1e3:.1f}ms")
   print(f"[serve_mmo] batches={st.batches} mean_batch={st.mean_batch:.2f} "
-        f"cache={st.cache}")
+        f"rejected={st.rejected} expired={st.expired} cache={st.cache}")
+  if st.rejected:
+    print(f"[serve_mmo] admission rejections: "
+          f"{dict(engine.admission.rejections)}")
   if mesh is not None:
     placement: dict = {}
     for s in engine._schedules.values():

@@ -7,9 +7,17 @@ them serving workloads, not one-shot library calls.  This package turns the
 ``core.mmo`` / ``core.closure`` stack into a request-driven service:
 
   api.py        — problem requests (apsp / knn / reachability / raw mmo)
-                  and result futures,
-  scheduler.py  — FIFO request queue bucketed by (kind, op, padded shape,
-                  dtype, static params),
+                  with QoS fields (tenant, priority, deadline_s) and result
+                  futures with rejected/expired terminal states,
+  scheduler.py  — request queue bucketed by (kind, op, padded shape, dtype,
+                  static params); bucket picking delegates to a policy,
+  policy.py     — scheduling policies: FIFO (default), deadline-aware
+                  (earliest feasible deadline, priority tiers, fail-fast),
+                  fair share (weighted round-robin across tenants),
+  admission.py  — admission control: bounded queue depth, per-tenant
+                  in-flight quotas, predicted-backlog-seconds rejection,
+  metrics.py    — lock-cheap rolling-window metrics (per-bucket p50/p99
+                  queue + service latency), snapshotable mid-run,
   batching.py   — pad-and-stack micro-batcher: one compiled program per
                   bucket executes a whole request batch (per-request
                   convergence masks for closures),
@@ -22,17 +30,26 @@ Quickstart::
 
     from repro.serve_mmo import MMOEngine, apsp_request, knn_request
 
-    eng = MMOEngine(backend="xla", max_batch=8)
-    futs = [eng.submit(apsp_request(w)) for w in weight_matrices]
+    eng = MMOEngine(backend="xla", max_batch=8,
+                    policy="deadline", max_queue=1024)
+    futs = [eng.submit(apsp_request(w, deadline_s=0.2))
+            for w in weight_matrices]
     eng.run_until_idle()
     dist = futs[0].result().value
+    print(eng.metrics_snapshot())
 """
-from repro.serve_mmo.api import (ProblemRequest, MMOFuture, MMOResult,
-                                 apsp_request, closure_request, knn_request,
-                                 mmo_request, reachability_request)
+from repro.serve_mmo.admission import AdmissionController
+from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
+                                 ProblemRequest, RejectedError, apsp_request,
+                                 closure_request, knn_request, mmo_request,
+                                 reachability_request)
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.engine import EngineStats, MMOEngine
-from repro.serve_mmo.scheduler import BucketKey, FifoBucketScheduler
+from repro.serve_mmo.metrics import RollingWindow, ServeMetrics
+from repro.serve_mmo.policy import (DeadlinePolicy, FairSharePolicy,
+                                    FifoPolicy, SchedulingPolicy, make_policy)
+from repro.serve_mmo.scheduler import (BucketKey, BucketScheduler,
+                                       FifoBucketScheduler)
 
 __all__ = [
     "ProblemRequest",
@@ -42,7 +59,18 @@ __all__ = [
     "EngineStats",
     "ExecutableCache",
     "BucketKey",
+    "BucketScheduler",
     "FifoBucketScheduler",
+    "SchedulingPolicy",
+    "FifoPolicy",
+    "DeadlinePolicy",
+    "FairSharePolicy",
+    "make_policy",
+    "AdmissionController",
+    "ServeMetrics",
+    "RollingWindow",
+    "RejectedError",
+    "DeadlineExceededError",
     "mmo_request",
     "closure_request",
     "apsp_request",

@@ -25,26 +25,54 @@ from repro.core import semiring as sr_mod
 
 KINDS = ("mmo", "closure", "knn")
 ALGORITHMS = ("leyzorek", "bellman_ford")
+DEFAULT_TENANT = "default"
+
+
+class RejectedError(RuntimeError):
+  """The engine's admission controller refused the request at submit time
+  (queue full, tenant over quota, or predicted backlog too deep); nothing
+  was queued and the request will never execute."""
+
+
+class DeadlineExceededError(TimeoutError):
+  """The request's deadline passed while it was queued — or the scheduler
+  predicted it could no longer be met and failed it fast — so the engine
+  dropped it without executing."""
 
 
 @dataclasses.dataclass
 class ProblemRequest:
   """One serving request.  ``arrays`` are host operands; ``shape`` is the
   logical problem shape the scheduler buckets on; ``params`` are static
-  extras that must match within a bucket (algorithm, k, …)."""
+  extras that must match within a bucket (algorithm, k, …).
+
+  QoS fields: ``tenant`` names the submitter for per-tenant quotas and fair
+  sharing; ``priority`` is a tier (higher serves first under the deadline
+  policy); ``deadline_s`` is a latency budget in seconds from submit —
+  requests still queued past it fail with ``DeadlineExceededError`` instead
+  of executing late.
+  """
 
   kind: str
   op: str
   arrays: dict
   shape: tuple
   params: tuple = ()
+  # QoS (set by the request constructors, read by policies + admission)
+  tenant: str = DEFAULT_TENANT
+  priority: int = 0
+  deadline_s: Optional[float] = None
   # engine bookkeeping (assigned at submit)
   request_id: int = -1
   arrival_s: float = 0.0
+  deadline_at: Optional[float] = None  # absolute engine-clock deadline
+  predicted_s: float = 0.0             # admission's per-request cost charge
 
   def __post_init__(self):
     if self.kind not in KINDS:
       raise ValueError(f"kind must be one of {KINDS}, got {self.kind!r}")
+    if self.deadline_s is not None and not self.deadline_s > 0.0:
+      raise ValueError(f"deadline_s must be positive, got {self.deadline_s}")
     sr_mod.get(self.op)  # validates the mnemonic
 
 
@@ -64,6 +92,12 @@ class MMOFuture:
   ``result()`` blocks: when the engine's background loop is running it waits
   on the completion event; otherwise it synchronously drives ``engine.step``
   until this request's bucket is flushed (lazy batched execution).
+
+  Terminal states (``state``): 'done' (result available), 'failed'
+  (execution error), 'rejected' (admission refused it at submit —
+  ``RejectedError``), 'expired' (deadline passed while queued —
+  ``DeadlineExceededError``); 'pending' until one of those.  ``result()``
+  raises the matching error for the non-'done' terminals.
   """
 
   def __init__(self, engine, request: ProblemRequest):
@@ -72,17 +106,29 @@ class MMOFuture:
     self._event = threading.Event()
     self._result: Optional[MMOResult] = None
     self._error: Optional[BaseException] = None
+    self._state = "pending"
 
   # engine-side completion ---------------------------------------------------
   def _fulfill(self, result: MMOResult):
     self._result = result
+    self._state = "done"
     self._event.set()
 
   def _fail(self, err: BaseException):
     self._error = err
+    if isinstance(err, RejectedError):
+      self._state = "rejected"
+    elif isinstance(err, DeadlineExceededError):
+      self._state = "expired"
+    else:
+      self._state = "failed"
     self._event.set()
 
   # client-side --------------------------------------------------------------
+  @property
+  def state(self) -> str:
+    return self._state
+
   def done(self) -> bool:
     return self._event.is_set()
 
@@ -113,7 +159,9 @@ def _as2d(x, name: str) -> np.ndarray:
   return x
 
 
-def mmo_request(a, b, c=None, *, op: str = "mma") -> ProblemRequest:
+def mmo_request(a, b, c=None, *, op: str = "mma",
+                tenant: str = DEFAULT_TENANT, priority: int = 0,
+                deadline_s: Optional[float] = None) -> ProblemRequest:
   """Raw D = C ⊕ (A ⊗ B) instruction request."""
   a, b = _as2d(a, "a"), _as2d(b, "b")
   if a.shape[1] != b.shape[0]:
@@ -127,11 +175,14 @@ def mmo_request(a, b, c=None, *, op: str = "mma") -> ProblemRequest:
   return ProblemRequest(
       kind="mmo", op=op, arrays=arrays,
       shape=(a.shape[0], a.shape[1], b.shape[1]),
-      params=("c" in arrays,))
+      params=("c" in arrays,),
+      tenant=tenant, priority=priority, deadline_s=deadline_s)
 
 
 def closure_request(weights, *, op: str, algorithm: str = "leyzorek",
-                    prepared: bool = False) -> ProblemRequest:
+                    prepared: bool = False,
+                    tenant: str = DEFAULT_TENANT, priority: int = 0,
+                    deadline_s: Optional[float] = None) -> ProblemRequest:
   """Semiring fixed-point request (APSP, reliability paths, MST, …).
 
   ``weights`` uses the ring's graph conventions (core/closure.py); with
@@ -150,7 +201,9 @@ def closure_request(weights, *, op: str, algorithm: str = "leyzorek",
     w = w.copy()
     np.fill_diagonal(w, True if sr.boolean else self_value)
   return ProblemRequest(kind="closure", op=op, arrays={"adj": w},
-                        shape=(w.shape[0],), params=(algorithm,))
+                        shape=(w.shape[0],), params=(algorithm,),
+                        tenant=tenant, priority=priority,
+                        deadline_s=deadline_s)
 
 
 def apsp_request(weights, **kw) -> ProblemRequest:
@@ -163,7 +216,9 @@ def reachability_request(adj, **kw) -> ProblemRequest:
   return closure_request(adj, op="orand", **kw)
 
 
-def knn_request(queries, corpus, *, k: int) -> ProblemRequest:
+def knn_request(queries, corpus, *, k: int,
+                tenant: str = DEFAULT_TENANT, priority: int = 0,
+                deadline_s: Optional[float] = None) -> ProblemRequest:
   """K-nearest corpus points per query (squared-L2, ascending)."""
   q, r = _as2d(queries, "queries"), _as2d(corpus, "corpus")
   if q.shape[1] != r.shape[1]:
@@ -173,4 +228,6 @@ def knn_request(queries, corpus, *, k: int) -> ProblemRequest:
   return ProblemRequest(kind="knn", op="addnorm",
                         arrays={"queries": q, "corpus": r},
                         shape=(q.shape[0], r.shape[0], q.shape[1]),
-                        params=(k,))
+                        params=(k,),
+                        tenant=tenant, priority=priority,
+                        deadline_s=deadline_s)

@@ -1,7 +1,12 @@
 """The MMO serving engine: continuous micro-batching over shape buckets.
 
-One engine owns a FIFO bucket scheduler, an AOT executable cache, and the
-request bookkeeping.  Two ways to run it:
+One engine owns a policy-driven bucket scheduler (FIFO by default; deadline
+and fair-share policies via ``policy=`` — see serve_mmo/policy.py), an
+admission controller (``max_queue`` / ``tenant_quota`` / ``max_backlog_s``
+— see serve_mmo/admission.py), a live metrics registry
+(``engine.metrics_snapshot()`` works mid-run from any thread — see
+serve_mmo/metrics.py), an AOT executable cache, and the request
+bookkeeping.  Two ways to run it:
 
   * synchronous — ``submit()`` then ``step()`` / ``run_until_idle()`` (or
     just ``future.result()``, which drives steps lazily).  Deterministic;
@@ -18,6 +23,7 @@ arrivals pile into the next batch while the current one runs.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Optional
@@ -25,10 +31,14 @@ from typing import Optional
 import numpy as np
 
 from repro.serve_mmo import batching
-from repro.serve_mmo.api import MMOFuture, ProblemRequest
+from repro.serve_mmo.admission import AdmissionController
+from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture,
+                                 ProblemRequest, RejectedError)
 from repro.serve_mmo.cache import ExecutableCache
-from repro.serve_mmo.scheduler import (FifoBucketScheduler, MIN_BUCKET,
-                                       bucket_dim, contract_shape)
+from repro.serve_mmo.metrics import ServeMetrics
+from repro.serve_mmo.scheduler import (BucketScheduler, MIN_BUCKET,
+                                       bucket_dim, contract_shape,
+                                       request_bucket)
 
 
 @dataclasses.dataclass
@@ -58,6 +68,8 @@ class EngineStats:
   mean_batch: float
   latencies_s: np.ndarray
   cache: dict
+  rejected: int = 0
+  expired: int = 0
 
   def percentile(self, q: float) -> float:
     if len(self.latencies_s) == 0:
@@ -65,10 +77,17 @@ class EngineStats:
     return float(np.percentile(self.latencies_s, q))
 
   def summary(self) -> str:
-    p50, p99 = self.percentile(50) * 1e3, self.percentile(99) * 1e3
+    # must stay printable for an engine that served nothing (zero batches,
+    # zero records, all-rejected runs): percentiles report n/a, never a
+    # formatting error or division by zero
+    if len(self.latencies_s):
+      lat = (f"p50={self.percentile(50) * 1e3:.1f}ms "
+             f"p99={self.percentile(99) * 1e3:.1f}ms")
+    else:
+      lat = "p50=n/a p99=n/a"
     return (f"completed={self.completed} batches={self.batches} "
-            f"mean_batch={self.mean_batch:.2f} "
-            f"p50={p50:.1f}ms p99={p99:.1f}ms "
+            f"mean_batch={self.mean_batch:.2f} {lat} "
+            f"rejected={self.rejected} expired={self.expired} "
             f"cache_hits={self.cache['hits']} "
             f"cache_misses={self.cache['misses']}")
 
@@ -91,13 +110,27 @@ class MMOEngine:
   when unmeasured); a schedule name pins it.  The (schedule, mesh) placement
   is part of the executable-cache key, so sharded and local executables never
   collide and sharded steady state replays stored executables too.
+
+  QoS: ``policy`` selects the scheduling policy ('fifo' — the default and
+  the historical behavior, 'deadline', 'fair', or a SchedulingPolicy
+  instance); ``max_queue`` / ``tenant_quota`` / ``max_backlog_s`` configure
+  admission control (all-None = admit everything, the historical behavior);
+  requests carrying ``deadline_s`` that are still queued past their deadline
+  fail with ``DeadlineExceededError`` under every policy.  ``clock`` injects
+  a monotonic time source for the engine's arrival/deadline/metrics
+  bookkeeping (tests use a synthetic clock; the default is
+  ``time.perf_counter``).
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
                min_bucket: int = MIN_BUCKET,
                interpret: Optional[bool] = None,
                cost_table=None, mesh=None, schedule: str = "auto",
-               shard_flops: float = 1e8):
+               shard_flops: float = 1e8,
+               policy="fifo", max_queue: Optional[int] = None,
+               tenant_quota=None, max_backlog_s: Optional[float] = None,
+               admission: Optional[AdmissionController] = None,
+               clock=None, metrics_window: int = 512):
     from repro.core import distributed as dist
     valid_schedules = ("auto", "local") + dist.SCHEDULES
     if schedule not in valid_schedules:
@@ -113,30 +146,116 @@ class MMOEngine:
     self.shard_flops = float(shard_flops)
     self._mesh_sig = None if mesh is None else tuple(
         (a, int(mesh.shape[a])) for a in mesh.axis_names)
+    self._clock = clock if clock is not None else time.perf_counter
     self._decisions: dict = {}  # BucketKey → (backend, block cfg)
     self._schedules: dict = {}  # BucketKey → 'local' | distributed schedule
-    self.scheduler = FifoBucketScheduler(min_bucket=min_bucket,
-                                         max_batch=max_batch)
+    self._predicted: dict = {}  # BucketKey → predicted batch service seconds
+    self.scheduler = BucketScheduler(policy=policy, min_bucket=min_bucket,
+                                     max_batch=max_batch, clock=self._clock)
+    self.scheduler.predict_seconds = self.predict_request_seconds
+    if admission is None:
+      admission = AdmissionController(max_queue=max_queue,
+                                      tenant_quota=tenant_quota,
+                                      max_backlog_s=max_backlog_s)
+    self.admission = admission
+    self.metrics = ServeMetrics(clock=self._clock, window=metrics_window)
     self.cache = ExecutableCache()
     self._lock = threading.RLock()
     self._work = threading.Condition(self._lock)
     self._idle = threading.Condition(self._lock)  # signaled: _pending empty
     self._records: list[RequestRecord] = []
     self._batches = 0
+    self._rejected = 0
+    self._expired = 0
     self._next_id = 0
     self._pending: dict[int, MMOFuture] = {}
     self._inflight: set[int] = set()  # popped from the queue, executing now
     self._thread: Optional[threading.Thread] = None
     self._running = False
+    self._stopped = False  # stop() was called; submit refuses until start()
 
   # -- submission ------------------------------------------------------------
 
+  @staticmethod
+  def _iteration_factor(key) -> float:
+    """Contractions one request in this bucket runs: 1 for mmo/knn, the
+    solver's worst-case trip count for closures (Leyzorek squares ~lg(nb)
+    times, Bellman-Ford relaxes up to nb−1 times).  The cost-table row is
+    one contraction; service predictions must scale by this or closure
+    buckets look log-to-linear-factors cheaper than they are."""
+    if key.kind != "closure":
+      return 1.0
+    (nb,) = key.shape
+    (algorithm,) = key.params
+    if algorithm == "bellman_ford":
+      return float(max(1, nb - 1))
+    return float(max(1, math.ceil(math.log2(nb))))
+
+  def predict_request_seconds(self, key) -> float:
+    """Predicted service seconds for ONE request of this bucket: the cost
+    table's per-contraction answer (measured row when someone benchmarked
+    the point — for a fixed ``backend`` the table is consulted for that
+    backend's rows too — else the roofline prior) times the bucket's
+    worst-case contraction count.  Batch compute scales linearly with
+    occupied slots, so this is also the request's marginal contribution to
+    a batch and to queue backlog.  What the deadline policy's feasibility
+    check (a lower bound on the serving batch's duration) and the admission
+    controller's backlog accounting consume; memoized per bucket under the
+    engine lock like the dispatch decision itself."""
+    with self._lock:
+      s = self._predicted.get(key)
+      if s is None:
+        m, k, n = contract_shape(key)
+        from repro.tuning import dispatch as _dispatch
+        if self.backend == "auto":
+          d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
+                                table=self.cost_table)
+          backend, cfg, s = d.backend, d.cfg, d.seconds
+        else:
+          backend, cfg, s = self.backend, (), float("inf")
+          table = (self.cost_table if self.cost_table is not None
+                   else _dispatch.get_cost_table())
+          best = table.best(key.op, (m, k, n), key.dtypes[0],
+                            backends=(self.backend,)) if table else None
+          if best is not None:
+            cfg, s = best.cfg, best.seconds
+        if not math.isfinite(s):
+          from repro.tuning.cost_table import prior_seconds
+          s = prior_seconds(key.op, (m, k, n), key.dtypes[0], backend, cfg)
+        s *= self._iteration_factor(key)
+        self._predicted[key] = s
+      return s
+
   def submit(self, req: ProblemRequest) -> MMOFuture:
+    """Queue one request; returns its future.  Admission may refuse — the
+    future then arrives already failed with ``RejectedError`` (state
+    'rejected') and nothing was queued.  Raises RuntimeError after
+    ``stop()`` (submit-after-stop is an error, not a silent queue-forever)."""
     fut = MMOFuture(self, req)
     with self._work:
+      if self._stopped:
+        raise RuntimeError(
+            "submit() on a stopped engine: stop() shut the serving loop "
+            "down; call start() to resume accepting requests")
       req.request_id = self._next_id
       self._next_id += 1
-      req.arrival_s = time.perf_counter()
+      req.arrival_s = self._clock()
+      if req.deadline_s is not None and req.deadline_at is None:
+        req.deadline_at = req.arrival_s + float(req.deadline_s)
+      cost = 0.0
+      if self.admission.max_backlog_s is not None:
+        key = request_bucket(req, self.scheduler.min_bucket)
+        cost = self.predict_request_seconds(key)
+      verdict = self.admission.try_admit(req, cost_s=cost)
+      if verdict is not None:
+        kind, reason = verdict
+        self._rejected += 1
+        self.metrics.on_reject(kind)
+        fut._fail(RejectedError(
+            f"request {req.request_id} ({req.kind}/{req.op}) rejected: "
+            f"{reason}"))
+        return fut
+      self.metrics.on_submit()
       self.scheduler.add(req)
       self._pending[req.request_id] = fut
       self._work.notify()
@@ -243,15 +362,38 @@ class MMOEngine:
     return (key, rb, backend, block, schedule,
             None if schedule == "local" else self._mesh_sig)
 
+  def _expire(self, reqs) -> None:
+    """Fail requests whose deadline passed while queued (or that the policy
+    failed fast as hopeless).  Engine lock held by the caller."""
+    self._expired += len(reqs)
+    for r in reqs:
+      self.admission.on_dequeue(r)
+      self.admission.on_done(r)
+      self.metrics.on_expire(request_bucket(r, self.scheduler.min_bucket))
+      fut = self._pending.pop(r.request_id, None)
+      if fut is not None:
+        fut._fail(DeadlineExceededError(
+            f"request {r.request_id} ({r.kind}/{r.op}) missed its "
+            f"{r.deadline_s:g}s deadline while queued"))
+    if not self._pending:
+      self._idle.notify_all()
+
   def step(self) -> int:
-    """Schedule + execute one bucket batch; returns #requests completed."""
+    """Schedule + execute one bucket batch; returns #requests completed.
+    Requests whose deadline lapsed in the queue are failed here (the
+    scheduler diverts them out of the batch) without costing a batch slot."""
     with self._lock:
-      picked = self.scheduler.next_batch()
+      picked = self.scheduler.next_batch(now=self._clock())
+      expired = self.scheduler.take_expired()
+      if expired:
+        self._expire(expired)
       if picked is None:
         return 0
       key, reqs = picked
+      for r in reqs:
+        self.admission.on_dequeue(r)
       self._inflight.update(r.request_id for r in reqs)
-    scheduled_s = time.perf_counter()
+    scheduled_s = self._clock()
     rb = self._batch_bucket(len(reqs))
     try:
       # fill the padded batch slots with copies of the last request — wasted
@@ -270,15 +412,18 @@ class MMOEngine:
       with self._lock:
         for r in reqs:
           self._inflight.discard(r.request_id)
+          self.admission.on_done(r)
+          self.metrics.on_fail(key)
           fut = self._pending.pop(r.request_id, None)
           if fut is not None:
             fut._fail(e)
         if not self._pending:
           self._idle.notify_all()
       return 0
-    completed_s = time.perf_counter()
+    completed_s = self._clock()
     with self._lock:
       self._batches += 1
+      self.metrics.on_batch()
       for r in reqs:
         self._inflight.discard(r.request_id)
       for r, res in zip(reqs, results):
@@ -286,6 +431,9 @@ class MMOEngine:
             request_id=r.request_id, kind=r.kind, op=r.op, bucket=tuple(key),
             batch_size=len(reqs), arrival_s=r.arrival_s,
             scheduled_s=scheduled_s, completed_s=completed_s))
+        self.admission.on_done(r)
+        self.metrics.on_complete(key, queue_s=scheduled_s - r.arrival_s,
+                                 service_s=completed_s - scheduled_s)
         fut = self._pending.pop(r.request_id, None)
         if fut is not None:
           fut._fulfill(res)
@@ -345,6 +493,21 @@ class MMOEngine:
             0.0, min(0.005, deadline - time.perf_counter()))
         fut._event.wait(wait)
 
+  # -- live metrics ----------------------------------------------------------
+
+  def metrics_snapshot(self) -> dict:
+    """Point-in-time QoS view (rolling-window per-bucket p50/p99 queue +
+    service latency, counters, queue depth, admission state).  Safe to call
+    from any thread while the background loop is serving — it reads the
+    gauges under the engine lock for one moment, then aggregates outside the
+    serving path."""
+    with self._lock:
+      depth = len(self.scheduler)
+      executing = len(self._inflight)
+      adm = self.admission.snapshot()
+    return self.metrics.snapshot(queue_depth=depth, executing=executing,
+                                 admission=adm)
+
   def prewarm(self, sample_reqs) -> int:
     """Compile every (bucket, pow2-batch) executable the sample's buckets can
     produce, without executing anything.  Returns #programs compiled.  After
@@ -373,8 +536,10 @@ class MMOEngine:
   # -- background serving loop -----------------------------------------------
 
   def start(self):
-    """Spawn the background serving thread (idempotent)."""
+    """Spawn the background serving thread (idempotent; re-arms submit
+    after a stop())."""
     with self._lock:
+      self._stopped = False
       if self._running:
         return
       self._running = True
@@ -384,7 +549,11 @@ class MMOEngine:
 
   def stop(self, *, drain: bool = True):
     """Stop the loop; with ``drain`` finish everything queued first (if the
-    loop is not running, drain synchronously instead of spinning)."""
+    loop is not running, drain synchronously instead of spinning).  Stopped
+    is a terminal accepting state: later ``submit`` calls raise until
+    ``start()`` is called again (pinned in tests/test_serve_mmo.py)."""
+    with self._lock:
+      self._stopped = True
     if drain:
       if self._thread is not None and self._thread.is_alive():
         # step() notifies _idle the moment _pending empties, so drain wakes
@@ -417,6 +586,7 @@ class MMOEngine:
     with self._lock:
       recs = list(self._records)
       batches = self._batches
+      rejected, expired = self._rejected, self._expired
     lat = np.asarray([r.latency_s for r in recs], dtype=np.float64)
     return EngineStats(
         completed=len(recs),
@@ -424,9 +594,13 @@ class MMOEngine:
         mean_batch=(len(recs) / batches) if batches else 0.0,
         latencies_s=lat,
         cache=self.cache.stats(),
+        rejected=rejected,
+        expired=expired,
     )
 
   def reset_stats(self):
     with self._lock:
       self._records.clear()
       self._batches = 0
+      self._rejected = 0
+      self._expired = 0

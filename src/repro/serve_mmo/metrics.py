@@ -1,0 +1,180 @@
+"""Live serving metrics: lock-cheap rolling windows, snapshotable mid-run.
+
+``EngineStats`` summarizes a *finished* run from the full record list; this
+module is the opposite trade — bounded memory, O(1) appends under one short
+lock, and a ``snapshot()`` that is safe to call from any thread while the
+background serving loop is mid-batch (no stop, no drain).  That is what a
+metrics endpoint / ``launch/serve_mmo.py --metrics-every`` needs: p99 *now*,
+not p99 after the run.
+
+Per bucket, two rolling windows: queue latency (submit → batch pick) and
+service latency (batch pick → results ready).  Percentiles come from the
+last ``window`` observations — a rolling estimate that tracks load shifts
+instead of averaging them away.  Global counters (submitted / completed /
+rejected / expired / failed / batches) are plain monotonic ints.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+__all__ = ["RollingWindow", "ServeMetrics", "bucket_label"]
+
+
+class RollingWindow:
+  """Fixed-capacity ring of float observations with percentile queries.
+
+  Appends are O(1) (one slot write + index bump); ``percentile`` sorts the
+  live slots — called only from ``snapshot``, never on the serving path.
+  """
+
+  __slots__ = ("_buf", "_size", "_n")
+
+  def __init__(self, size: int = 512):
+    if size < 1:
+      raise ValueError(f"window size must be >= 1, got {size}")
+    self._buf = [0.0] * size
+    self._size = size
+    self._n = 0  # total observations ever (live slots = min(n, size))
+
+  def add(self, value: float) -> None:
+    self._buf[self._n % self._size] = float(value)
+    self._n += 1
+
+  @property
+  def count(self) -> int:
+    return self._n
+
+  def values(self) -> list:
+    return list(self._buf[:min(self._n, self._size)])
+
+  def percentile(self, q: float) -> float:
+    return _rank(sorted(self.values()), q)
+
+
+def _rank(sorted_vals: list, q: float) -> float:
+  """Nearest-rank percentile over a pre-sorted list (no numpy on the
+  metrics path)."""
+  if not sorted_vals:
+    return float("nan")
+  idx = min(len(sorted_vals) - 1,
+            max(0, round(q / 100.0 * (len(sorted_vals) - 1))))
+  return sorted_vals[int(idx)]
+
+
+def bucket_label(key) -> str:
+  """Compact human/JSON label for one BucketKey."""
+  shape = "x".join(str(d) for d in key.shape)
+  return f"{key.kind}/{key.op}/{shape}/{key.dtypes[0]}"
+
+
+class ServeMetrics:
+  """The engine's live metrics registry (one per MMOEngine).
+
+  Every hook takes the lock for a few dict/ring operations and returns —
+  cheap enough to sit inside ``submit`` and ``step`` without stretching the
+  engine's critical sections.  ``snapshot`` is read-only aggregation and can
+  run concurrently with serving.
+  """
+
+  COUNTERS = ("submitted", "completed", "rejected", "expired", "failed",
+              "batches")
+
+  def __init__(self, *, clock=None, window: int = 512):
+    self._clock = clock if clock is not None else time.perf_counter
+    self._window = window
+    self._lock = threading.Lock()
+    self._started_s = self._clock()
+    self._counters = {name: 0 for name in self.COUNTERS}
+    self._rejected_by_reason: dict[str, int] = {}
+    self._buckets: dict[str, dict] = {}  # label → {queue, service: RollingWindow}
+
+  # -- engine hooks ------------------------------------------------------------
+
+  def _bucket(self, key) -> dict:
+    label = bucket_label(key)
+    b = self._buckets.get(label)
+    if b is None:
+      b = self._buckets[label] = {"queue": RollingWindow(self._window),
+                                  "service": RollingWindow(self._window),
+                                  "completed": 0, "expired": 0, "failed": 0}
+    return b
+
+  def on_submit(self) -> None:
+    with self._lock:
+      self._counters["submitted"] += 1
+
+  def on_reject(self, kind: str) -> None:
+    with self._lock:
+      self._counters["rejected"] += 1
+      self._rejected_by_reason[kind] = self._rejected_by_reason.get(kind, 0) + 1
+
+  def on_expire(self, key) -> None:
+    with self._lock:
+      self._counters["expired"] += 1
+      self._bucket(key)["expired"] += 1
+
+  def on_fail(self, key) -> None:
+    with self._lock:
+      self._counters["failed"] += 1
+      self._bucket(key)["failed"] += 1
+
+  def on_batch(self) -> None:
+    with self._lock:
+      self._counters["batches"] += 1
+
+  def on_complete(self, key, queue_s: float, service_s: float) -> None:
+    with self._lock:
+      self._counters["completed"] += 1
+      b = self._bucket(key)
+      b["completed"] += 1
+      b["queue"].add(queue_s)
+      b["service"].add(service_s)
+
+  # -- reading -----------------------------------------------------------------
+
+  def counter(self, name: str) -> int:
+    with self._lock:
+      return self._counters[name]
+
+  def snapshot(self, *, queue_depth: Optional[int] = None,
+               executing: Optional[int] = None,
+               admission: Optional[dict] = None) -> dict:
+    """JSON-able point-in-time view.  ``queue_depth`` / ``executing`` /
+    ``admission`` are gauges the engine reads under its own lock and passes
+    in (the registry never reaches back into the engine — no lock-order
+    coupling).  Only O(1)-per-bucket window *copies* happen under the
+    metrics lock; the sorts behind the percentiles run after it is
+    released, so a slow snapshot can never stall the serving hooks."""
+    with self._lock:
+      raw = {label: (b["completed"], b["expired"], b["failed"],
+                     b["queue"].values(), b["service"].values())
+             for label, b in self._buckets.items()}
+      snap = {
+          "uptime_s": self._clock() - self._started_s,
+          "counters": dict(self._counters),
+          "rejected_by_reason": dict(self._rejected_by_reason),
+      }
+    buckets = {}
+    for label, (completed, expired, failed, queue_v, service_v) in raw.items():
+      queue_v.sort()
+      service_v.sort()
+      buckets[label] = {
+          "completed": completed,
+          "expired": expired,
+          "failed": failed,
+          "queue_ms": {"p50": _rank(queue_v, 50) * 1e3,
+                       "p99": _rank(queue_v, 99) * 1e3},
+          "service_ms": {"p50": _rank(service_v, 50) * 1e3,
+                         "p99": _rank(service_v, 99) * 1e3},
+          "window": len(queue_v),
+      }
+    snap["buckets"] = buckets
+    if queue_depth is not None:
+      snap["queue_depth"] = queue_depth
+    if executing is not None:
+      snap["executing"] = executing
+    if admission is not None:
+      snap["admission"] = admission
+    return snap

@@ -1,4 +1,4 @@
-"""Shape-bucketed FIFO scheduler for the MMO serving engine.
+"""Shape-bucketed request scheduler for the MMO serving engine.
 
 Requests land in buckets keyed by (kind, op, padded shape, dtype, static
 params).  Padding each dimension up to the next power of two (with a floor)
@@ -6,25 +6,38 @@ collapses the long tail of real-world problem shapes onto a handful of
 compiled programs while bounding wasted compute at <4× (2× per padded axis
 in the worst case, far less on average).
 
-Scheduling policy: within a bucket, strict FIFO by submit order; across
-buckets, the bucket whose *head* request is oldest goes first.  That is the
-no-starvation choice: a hot bucket cannot shadow a cold one indefinitely,
-and completion order within a bucket always matches submit order (tested).
+*Which* bucket batches next — and in what order requests leave a bucket —
+is a pluggable ``SchedulingPolicy`` (serve_mmo/policy.py): FIFO (oldest
+head first, the default and the engine's historical behavior), deadline
+(earliest-feasible-deadline with priority tiers and fail-fast), or fair
+share (weighted round-robin across tenants).  The scheduler itself only
+owns storage: one heap per bucket, ordered by the policy's request rank
+with submit seq breaking ties, so the FIFO policy's heaps degenerate to
+exact submit order.
+
+Deadline bookkeeping also lives here: ``add`` stamps each request's
+absolute ``deadline_at``, and ``next_batch`` diverts requests whose
+deadline already passed — or that the policy declares hopeless — into an
+``expired`` side channel (``take_expired``) instead of the batch, so the
+engine can fail them without burning executable time.
 """
 from __future__ import annotations
 
-import collections
+import heapq
+import time
 from typing import NamedTuple, Optional
 
 import numpy as np
 
 from repro.serve_mmo.api import ProblemRequest
+from repro.serve_mmo.policy import FifoPolicy, QueueEntry, make_policy
 # Canonical bucketing lives in tuning.cost_table so the cost table's key —
 # the bucket signature — is the same function of a shape everywhere.
 from repro.tuning.cost_table import MIN_BUCKET, bucket_dim, bucket_shape
 
 __all__ = ["MIN_BUCKET", "BucketKey", "bucket_dim", "bucket_shape",
-           "contract_shape", "request_bucket", "FifoBucketScheduler"]
+           "contract_shape", "request_bucket", "BucketScheduler",
+           "FifoBucketScheduler"]
 
 
 class BucketKey(NamedTuple):
@@ -60,40 +73,95 @@ def request_bucket(req: ProblemRequest,
                    dtypes=dtypes, params=req.params)
 
 
-class FifoBucketScheduler:
-  """Request queue + bucket picker (host-side, O(buckets) per decision)."""
+class BucketScheduler:
+  """Request queue + policy-driven bucket picker (host-side).
 
-  def __init__(self, *, min_bucket: int = MIN_BUCKET, max_batch: int = 8):
+  ``predict_seconds`` is an optional ``BucketKey → seconds`` hook (the
+  engine wires it to the cost table's per-request service prediction,
+  ``MMOEngine.predict_request_seconds``) that deadline-aware policies use
+  for feasibility; without it, fail-fast degrades to plain already-expired
+  detection.
+  """
+
+  def __init__(self, *, policy="fifo", min_bucket: int = MIN_BUCKET,
+               max_batch: int = 8, clock=None):
     if max_batch < 1:
       raise ValueError("max_batch must be >= 1")
+    self.policy = make_policy(policy)
     self.min_bucket = min_bucket
     self.max_batch = max_batch
-    self._buckets: dict[BucketKey, collections.deque] = {}
+    self.predict_seconds = None  # set by the engine (see MMOEngine)
+    self._clock = clock if clock is not None else time.perf_counter
+    self._buckets: dict[BucketKey, list[QueueEntry]] = {}  # heaps
     self._seq = 0
+    self._expired: list[ProblemRequest] = []
 
   def __len__(self) -> int:
     return sum(len(q) for q in self._buckets.values())
 
   def add(self, req: ProblemRequest) -> BucketKey:
+    now = self._clock()
+    if req.deadline_s is not None and req.deadline_at is None:
+      req.deadline_at = now + float(req.deadline_s)
     key = request_bucket(req, self.min_bucket)
-    self._buckets.setdefault(key, collections.deque()).append(
-        (self._seq, req))
+    entry = QueueEntry(self._seq, req, self.policy.request_rank(req, now))
     self._seq += 1
+    heapq.heappush(self._buckets.setdefault(key, []), entry)
+    self.policy.on_add(entry, key, self)
     return key
 
   def pending_buckets(self) -> dict:
     return {k: len(q) for k, q in self._buckets.items() if q}
 
-  def next_batch(self) -> Optional[tuple]:
-    """(BucketKey, [requests]) for the bucket with the oldest head, or None."""
-    best_key, best_seq = None, None
-    for key, q in self._buckets.items():
-      if q and (best_seq is None or q[0][0] < best_seq):
-        best_key, best_seq = key, q[0][0]
-    if best_key is None:
-      return None
-    q = self._buckets[best_key]
-    batch = [q.popleft()[1] for _ in range(min(self.max_batch, len(q)))]
-    if not q:
-      del self._buckets[best_key]
-    return best_key, batch
+  def next_batch(self, now: Optional[float] = None) -> Optional[tuple]:
+    """(BucketKey, [requests]) for the policy's chosen bucket, or None.
+
+    Requests whose deadline already passed, or that the policy fails fast,
+    are diverted to the ``take_expired`` side channel rather than returned;
+    a pick whose bucket expires away entirely falls through to the next
+    pick, so a non-None return always carries at least one live request.
+    """
+    if now is None:
+      now = self._clock()
+    while True:
+      key = self.policy.pick(self, now)
+      if key is None:
+        return None
+      heap = self._buckets.get(key)
+      if not heap:  # stale pick (e.g. the bucket dict was cleared) — retry
+        self._buckets.pop(key, None)
+        continue
+      batch = []
+      while heap and len(batch) < self.max_batch:
+        entry = heapq.heappop(heap)
+        if entry.taken:
+          continue
+        entry.taken = True
+        deadline = entry.req.deadline_at
+        if ((deadline is not None and deadline < now)
+            or self.policy.fail_fast(entry, key, self, now)):
+          self._expired.append(entry.req)
+          continue
+        batch.append(entry.req)
+      if not heap:
+        del self._buckets[key]
+      if batch:
+        self.policy.on_batch(key, batch, self)
+        return key, batch
+
+  def take_expired(self) -> list:
+    """Requests diverted by deadline expiry / fail-fast since the last call
+    (drained by the engine, which fails their futures)."""
+    expired, self._expired = self._expired, []
+    return expired
+
+
+class FifoBucketScheduler(BucketScheduler):
+  """Back-compat name: the scheduler pinned to the FIFO policy (strict FIFO
+  within a bucket, oldest-head-first across buckets — the engine's
+  historical behavior, byte-for-byte)."""
+
+  def __init__(self, *, min_bucket: int = MIN_BUCKET, max_batch: int = 8,
+               clock=None):
+    super().__init__(policy=FifoPolicy(), min_bucket=min_bucket,
+                     max_batch=max_batch, clock=clock)

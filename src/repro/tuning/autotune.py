@@ -3,12 +3,24 @@
     PYTHONPATH=src python -m repro.tuning.autotune --out cost_table.json
     PYTHONPATH=src python -m repro.tuning.autotune --dry-prior --out t.json
 
+    # mesh rows too: measure dp/kspan/SUMMA/ring on a (2, 4) device mesh so
+    # backend="auto" sharded serving dispatches from measurements
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.tuning.autotune --mesh 2,4 --out cost_table.json
+
 Every point is first seeded with the analytic roofline prior, then (unless
 ``--dry-prior``) measured on the live device with best-of wall timing; the
 table's measured-beats-prior precedence means re-running the tuner only ever
 sharpens the table.  ``--dry-prior`` exists for CI: it exercises the whole
 sweep → record → serialize path with zero device timing, so schema rot is
 caught without needing quiet hardware.
+
+``--mesh ROWS,COLS`` extends the sweep to the distributed-schedule arms:
+each (op, shape, dtype) point is also measured as one batched sharded
+contraction per schedule (same per-request single-step units as
+``benchmarks/shard_bench.py --cost-table`` records, so rows from either
+source are interchangeable), which is what ``dispatch.resolve(mesh_shape=…)``
+compares against the local arm when routing serving buckets to the mesh.
 """
 from __future__ import annotations
 
@@ -20,8 +32,9 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import semiring as sr_mod
-from repro.tuning.cost_table import (CostTable, DEFAULT_CONFIGS,
-                                     bucket_shape, prior_seconds)
+from repro.tuning.cost_table import (SCHEDULE_ARMS, CostTable,
+                                     DEFAULT_CONFIGS, bucket_shape,
+                                     prior_seconds, sharded_prior_seconds)
 
 DEFAULT_OPS = ("mma", "minplus", "maxmin", "maxmul", "orand", "addnorm")
 DEFAULT_SHAPES = ((64, 64, 64), (128, 128, 128), (64, 256, 64))
@@ -125,6 +138,90 @@ def tune(*,
   return table
 
 
+def measure_sharded_point(op: str, shape, dtype, schedule: str, mesh, *,
+                          requests: Optional[int] = None, iters: int = 3,
+                          warmup: int = 1) -> float:
+  """Best-of wall seconds *per request* for one distributed-schedule arm:
+  one batched sharded contraction over ``requests`` (default: one per
+  device, the smallest batch every schedule can shard).  Per-request
+  single-step units match ``benchmarks/shard_bench.py``'s ``step_seconds``
+  and the table's one-(m, k, n)-contraction signature."""
+  import jax
+  import jax.numpy as jnp
+  from repro.core.distributed import mmo_sharded_batched
+
+  r = requests if requests is not None else mesh.size
+  m, k, n = bucket_shape(shape)
+  ops = []
+  for i in range(r):
+    a_h, b_h = _operands(op, shape, dtype, seed=i)
+    ops.append((a_h, b_h))
+  a = jnp.asarray(np.stack([o[0] for o in ops]))
+  b = jnp.asarray(np.stack([o[1] for o in ops]))
+  fn = jax.jit(lambda x, y: mmo_sharded_batched(
+      x, y, op=op, schedule=schedule, mesh=mesh, backend="xla"))
+  for _ in range(warmup):
+    jax.block_until_ready(fn(a, b))
+  best = float("inf")
+  for _ in range(iters):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(a, b))
+    best = min(best, time.perf_counter() - t0)
+  return best / r
+
+
+def tune_mesh(*,
+              dims: Sequence[int],
+              mesh=None,
+              ops: Sequence[str] = DEFAULT_OPS,
+              shapes: Sequence[tuple] = DEFAULT_SHAPES,
+              dtypes: Sequence[str] = ("float32",),
+              schedules: Sequence[str] = SCHEDULE_ARMS,
+              table: Optional[CostTable] = None,
+              iters: int = 3,
+              warmup: int = 1,
+              dry_prior: bool = False,
+              verbose: bool = False) -> CostTable:
+  """Sweep the distributed-schedule arms on a (rows, cols) mesh, recording
+  the sharded roofline prior for every point and measurements unless
+  ``dry_prior`` (which needs no mesh at all — CI schema coverage).  Points a
+  schedule cannot shard (``core.distributed.schedule_fits``) are skipped.
+  Updates and returns ``table``."""
+  dims = tuple(int(d) for d in dims)
+  if table is None:
+    table = CostTable(device="prior-only" if dry_prior else _device_label())
+  if not dry_prior:
+    if mesh is None:
+      import jax
+      mesh = jax.make_mesh(dims, ("data", "model"))
+    from repro.core.distributed import schedule_fits
+  for op in ops:
+    op_dtypes = ("bool",) if sr_mod.get(op).boolean else dtypes
+    for shape in shapes:
+      m, k, n = bucket_shape(shape)
+      for dtype in op_dtypes:
+        for sched in schedules:
+          if sched not in SCHEDULE_ARMS:
+            raise ValueError(f"unknown schedule {sched!r}; one of "
+                             f"{SCHEDULE_ARMS}")
+          table.record(op, shape, dtype, sched, dims,
+                       sharded_prior_seconds(op, (m, k, n), dtype, sched,
+                                             dims),
+                       source="prior")
+          if dry_prior:
+            continue
+          if not schedule_fits(sched, m, k, n, mesh):
+            continue
+          seconds = measure_sharded_point(op, shape, dtype, sched, mesh,
+                                          iters=iters, warmup=warmup)
+          table.record(op, shape, dtype, sched, dims, seconds,
+                       source="measured")
+          if verbose:
+            print(f"[autotune] {op} {shape} {dtype} {sched}@{dims}: "
+                  f"{seconds * 1e6:.1f}us", file=sys.stderr)
+  return table
+
+
 def tune_for_requests(reqs, **kw) -> CostTable:
   """Tune exactly the (op, contraction-shape, dtype) points a sample of
   serving requests exercises — the engine-warmup entry point."""
@@ -161,6 +258,13 @@ def main(argv=None) -> int:
                        "--dry-prior, else what this host can serve with")
   ap.add_argument("--iters", type=int, default=3)
   ap.add_argument("--warmup", type=int, default=1)
+  ap.add_argument("--mesh", default=None, metavar="ROWS,COLS",
+                  help="also sweep the distributed-schedule arms "
+                       f"({','.join(SCHEDULE_ARMS)}) on a device mesh of "
+                       "this shape, recording mesh rows the sharded serving "
+                       "path dispatches from (dry-prior needs no devices)")
+  ap.add_argument("--schedules", default=",".join(SCHEDULE_ARMS),
+                  help="comma-separated schedule arms for --mesh")
   ap.add_argument("-v", "--verbose", action="store_true")
   args = ap.parse_args(argv)
 
@@ -173,6 +277,22 @@ def main(argv=None) -> int:
     ap.error(f"--shapes must be comma-separated MxKxN triples, got "
              f"{args.shapes!r}")
 
+  dims = None
+  if args.mesh:
+    try:
+      dims = tuple(int(x) for x in args.mesh.split(","))
+      if len(dims) != 2 or any(d <= 0 for d in dims):
+        raise ValueError
+    except ValueError:
+      ap.error(f"--mesh must be 'rows,cols' positive ints, got {args.mesh!r}")
+    if not args.dry_prior:
+      import jax
+      need, have = dims[0] * dims[1], len(jax.devices())
+      if need > have:
+        ap.error(f"--mesh {args.mesh} needs {need} devices, host has {have} "
+                 f"(on CPU: XLA_FLAGS=--xla_force_host_platform_device_count="
+                 f"{need})")
+
   table = CostTable.load(args.out) if args.update else None
   backends = tuple(args.backends.split(",")) if args.backends else None
   table = tune(ops=tuple(args.ops.split(",")), shapes=shapes,
@@ -180,6 +300,12 @@ def main(argv=None) -> int:
                backends=backends, table=table,
                iters=args.iters, warmup=args.warmup,
                dry_prior=args.dry_prior, verbose=args.verbose)
+  if dims is not None:
+    table = tune_mesh(dims=dims, ops=tuple(args.ops.split(",")),
+                      shapes=shapes, dtypes=tuple(args.dtypes.split(",")),
+                      schedules=tuple(args.schedules.split(",")),
+                      table=table, iters=args.iters, warmup=args.warmup,
+                      dry_prior=args.dry_prior, verbose=args.verbose)
   table.save(args.out)
   counts = table.counts()
   print(f"[autotune] wrote {args.out}: {len(table)} entries "

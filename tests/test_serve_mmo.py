@@ -234,6 +234,34 @@ def test_stop_without_loop_drains_synchronously():
   assert fut.done() and fut.result().value.shape == (10, 10)
 
 
+def test_submit_after_stop_raises_cleanly():
+  """Pinned decision: stop() is a terminal accepting state — submit raises
+  a RuntimeError instead of queueing onto a loop nobody will run; start()
+  re-arms the engine."""
+  eng = MMOEngine(backend="xla")
+  eng.start()
+  eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=0)))
+  eng.stop()
+  with pytest.raises(RuntimeError, match="stopped engine"):
+    eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=1)))
+  eng.start()  # restart re-arms submission
+  fut = eng.submit(apsp_request(graphs.weighted_digraph(10, 0.3, seed=2)))
+  eng.stop()
+  assert fut.result().value.shape == (10, 10)
+
+
+def test_stats_summary_on_idle_engine_does_not_crash():
+  """EngineStats.summary() on an engine that served zero requests must stay
+  printable (no division by zero, no empty-percentile blowup) and must
+  carry the rejected/expired counters."""
+  eng = MMOEngine(backend="xla")
+  st = eng.stats()
+  s = st.summary()
+  assert "completed=0" in s and "p50=n/a" in s
+  assert "rejected=0" in s and "expired=0" in s
+  assert st.mean_batch == 0.0 and np.isnan(st.percentile(99))
+
+
 def test_engine_closure_reports_iterations():
   eng = MMOEngine(backend="xla")
   w = graphs.weighted_digraph(12, 0.3, seed=0)

@@ -113,6 +113,31 @@ def test_dry_prior_tune_round_trips(prior_table, tmp_path):
   assert len(CostTable.load(path)) == len(prior_table)
 
 
+def test_dry_prior_mesh_sweep_records_schedule_rows(tmp_path):
+  """The --mesh sweep fills every distributed-schedule arm with the sharded
+  roofline prior (no devices needed), keyed on the mesh shape — the rows
+  dispatch.resolve(mesh_shape=…) reads for sharded serving."""
+  from repro.tuning import SCHEDULE_ARMS
+  from repro.tuning.autotune import tune_mesh
+  dims = (2, 4)
+  table = tune_mesh(dims=dims, ops=("minplus", "orand"),
+                    shapes=((64, 64, 64),), dry_prior=True)
+  for op, dtype in (("minplus", "float32"), ("orand", "bool")):
+    for sched in SCHEDULE_ARMS:
+      entry = table.lookup(op, (64, 64, 64), dtype, sched, dims)
+      assert entry is not None and entry.source == "prior", (op, sched)
+  # round-trips like any other table, and a measured row later wins
+  path = tmp_path / "mesh.json"
+  table.save(path)
+  loaded = CostTable.load(path)
+  assert loaded.record("minplus", (64, 64, 64), "float32", "dp", dims, 1e-9)
+  d = resolve("minplus", 64, 64, 64, "float32", table=loaded,
+              mesh_shape=dims)
+  assert d.backend == "dp" and d.source == "measured"
+  with pytest.raises(ValueError, match="unknown schedule"):
+    tune_mesh(dims=dims, schedules=("warp",), dry_prior=True)
+
+
 @pytest.mark.parametrize("op", ["mma", "minplus", "maxmin", "maxmul",
                                 "orand", "addnorm"])
 @pytest.mark.parametrize("shape", [(7, 11, 5), (16, 16, 16)])
