@@ -14,6 +14,11 @@
         --deadline-s 0.25 --max-queue 256 --tenant-quota 64 \
         --metrics-every 1 --rate 80 --duration 5
 
+    # adaptive QoS: predictions track measured latency; bulk batches are
+    # capped to ~20ms of predicted work while deadline traffic is active
+    PYTHONPATH=src python -m repro.launch.serve_mmo --policy deadline \
+        --deadline-s 0.25 --adaptive --max-batch-seconds 0.02 --rate 80
+
 Generates a Poisson arrival stream of mixed SIMD² problems (APSP, KNN,
 reachability, raw mmo at several sizes), submits each request at its arrival
 time against the engine's background serving loop, and reports throughput
@@ -125,6 +130,17 @@ def main(argv=None):
   ap.add_argument("--max-backlog-s", type=float, default=None,
                   help="admission: reject once the queue's predicted drain "
                        "time (cost-table seconds) exceeds this")
+  ap.add_argument("--adaptive", action="store_true",
+                  help="close the prediction loop: deadline feasibility, "
+                       "backlog admission, and the batch cap read live EWMA "
+                       "service latency + measured closure convergence "
+                       "counts instead of the static cost table alone")
+  ap.add_argument("--max-batch-seconds", type=float, default=None,
+                  metavar="SECS",
+                  help="service-time batch cap: while deadline traffic is "
+                       "active, bound each bulk batch to ~SECS of predicted "
+                       "work so an urgent arrival never waits a full "
+                       "max_batch service time behind one")
   ap.add_argument("--deadline-s", type=float, default=None,
                   help="tag a --deadline-frac share of traffic with this "
                        "latency budget (priority 1); late requests expire")
@@ -198,7 +214,9 @@ def main(argv=None):
                      shard_flops=args.shard_flops,
                      policy=args.policy, max_queue=args.max_queue,
                      tenant_quota=args.tenant_quota,
-                     max_backlog_s=args.max_backlog_s)
+                     max_backlog_s=args.max_backlog_s,
+                     adaptive=args.adaptive,
+                     max_batch_seconds=args.max_batch_seconds)
 
   if not args.no_warmup:
     t0 = time.perf_counter()
@@ -262,6 +280,13 @@ def main(argv=None):
   if st.rejected:
     print(f"[serve_mmo] admission rejections: "
           f"{dict(engine.admission.rejections)}")
+  if args.adaptive:
+    est = engine.estimator.snapshot()
+    warm = {label: f"{c['seconds'] * 1e3:.2f}ms/{c['observations']}obs"
+            for label, c in est["cells"].items()}
+    print(f"[serve_mmo] adaptive estimator (per-request EWMA): {warm}")
+    if est["iterations"]:
+      print(f"[serve_mmo] measured closure iterations: {est['iterations']}")
   if mesh is not None:
     placement: dict = {}
     for s in engine._schedules.values():

@@ -18,6 +18,11 @@ them serving workloads, not one-shot library calls.  This package turns the
                   in-flight quotas, predicted-backlog-seconds rejection,
   metrics.py    — lock-cheap rolling-window metrics (per-bucket p50/p99
                   queue + service latency), snapshotable mid-run,
+  estimator.py  — adaptive QoS: per-(bucket, backend, schedule) EWMA over
+                  measured batch latencies + measured closure convergence
+                  counts; corrects the cost-table predictions that drive
+                  deadline feasibility, backlog admission, and the
+                  service-time batch cap (``adaptive=True``),
   batching.py   — pad-and-stack micro-batcher: one compiled program per
                   bucket executes a whole request batch (per-request
                   convergence masks for closures),
@@ -45,6 +50,7 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
                                  reachability_request)
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.engine import EngineStats, MMOEngine
+from repro.serve_mmo.estimator import Estimate, ServiceEstimator
 from repro.serve_mmo.metrics import RollingWindow, ServeMetrics
 from repro.serve_mmo.policy import (DeadlinePolicy, FairSharePolicy,
                                     FifoPolicy, SchedulingPolicy, make_policy)
@@ -67,6 +73,8 @@ __all__ = [
     "FairSharePolicy",
     "make_policy",
     "AdmissionController",
+    "ServiceEstimator",
+    "Estimate",
     "ServeMetrics",
     "RollingWindow",
     "RejectedError",

@@ -13,15 +13,23 @@ future (``RejectedError``) instead of queueing:
                    uncapped).
   max_backlog_s  — predicted-backlog bound, in *seconds of work*: each
                    admitted request is charged its predicted service
-                   seconds (``MMOEngine.predict_request_seconds`` — the
-                   cost table's per-contraction answer times the bucket's
-                   worst-case contraction count), and a request that would
-                   push the queue's total predicted drain time past the
-                   bound is rejected.  Queue *length* is a poor overload
-                   signal when buckets differ by orders of magnitude in
-                   service time (a 256³ closure vs a 16³ mmo);
-                   seconds-of-work is the quantity latency SLOs are
-                   actually made of.  See DESIGN.md §Admission.
+                   seconds (``MMOEngine.predict_request_seconds`` — on a
+                   static engine the cost table's per-contraction answer
+                   times the bucket's worst-case contraction count; on an
+                   ``adaptive=True`` engine the live EWMA over measured
+                   batch latencies, with measured closure convergence
+                   counts correcting the cold-start prior — see
+                   serve_mmo/estimator.py), and a request that would push
+                   the queue's total predicted drain time past the bound
+                   is rejected.  Queue *length* is a poor overload signal
+                   when buckets differ by orders of magnitude in service
+                   time (a 256³ closure vs a 16³ mmo); seconds-of-work is
+                   the quantity latency SLOs are actually made of.  The
+                   charge is stamped on the request at admit time and
+                   released verbatim when it leaves the queue, so the
+                   accounting stays exact even while the live estimate
+                   drifts.  See DESIGN.md §Admission / §Adaptive
+                   prediction.
 
 All counters are maintained by the engine under its lock — the controller
 itself is plain state + arithmetic and is not independently thread-safe.
@@ -86,7 +94,8 @@ class AdmissionController:
         and self.backlog_s + cost_s > self.max_backlog_s):
       self.rejections["backlog"] += 1
       return ("backlog", f"predicted backlog {self.backlog_s + cost_s:.3f}s"
-                         f" > max_backlog_s={self.max_backlog_s:g}")
+                         f" > max_backlog_s={self.max_backlog_s:g} "
+                         f"(prediction: {req.predicted_source})")
     req.predicted_s = float(cost_s)
     self.queued += 1
     self.backlog_s += req.predicted_s

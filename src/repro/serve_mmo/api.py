@@ -67,6 +67,10 @@ class ProblemRequest:
   arrival_s: float = 0.0
   deadline_at: Optional[float] = None  # absolute engine-clock deadline
   predicted_s: float = 0.0             # admission's per-request cost charge
+  # where predicted_s came from: 'static' (cost table / roofline × worst-case
+  # trips), 'iterations' (static × measured convergence counts), or 'ewma'
+  # (live measured service latency) — see serve_mmo/estimator.py
+  predicted_source: str = "static"
 
   def __post_init__(self):
     if self.kind not in KINDS:

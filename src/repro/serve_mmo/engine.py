@@ -35,6 +35,7 @@ from repro.serve_mmo.admission import AdmissionController
 from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture,
                                  ProblemRequest, RejectedError)
 from repro.serve_mmo.cache import ExecutableCache
+from repro.serve_mmo.estimator import Estimate, ServiceEstimator
 from repro.serve_mmo.metrics import ServeMetrics
 from repro.serve_mmo.scheduler import (BucketScheduler, MIN_BUCKET,
                                        bucket_dim, contract_shape,
@@ -120,6 +121,21 @@ class MMOEngine:
   a monotonic time source for the engine's arrival/deadline/metrics
   bookkeeping (tests use a synthetic clock; the default is
   ``time.perf_counter``).
+
+  Adaptive QoS: the engine always *records* live feedback — every batch's
+  measured service latency and every closure batch's measured convergence
+  counts feed a per-(bucket, backend, schedule) EWMA estimator
+  (serve_mmo/estimator.py).  With ``adaptive=True``,
+  ``predict_request_seconds`` — the one number deadline feasibility,
+  backlog admission, and the batch cap all consume — answers from that
+  estimator (warm EWMA > static cost × measured iterations > static cost ×
+  worst-case trips) instead of the static cost table alone, so predictions
+  track the actual device under load.  ``max_batch_seconds`` arms the
+  service-time batch cap: while deadline-tagged traffic is active, bulk
+  batches are bounded to ~that many predicted seconds so an urgent arrival
+  never waits a full max_batch service time behind one (see
+  ``SchedulingPolicy.batch_cap``).  Neither knob changes dispatch decisions
+  or executable-cache keys, so steady state still never retraces.
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
@@ -130,7 +146,11 @@ class MMOEngine:
                policy="fifo", max_queue: Optional[int] = None,
                tenant_quota=None, max_backlog_s: Optional[float] = None,
                admission: Optional[AdmissionController] = None,
-               clock=None, metrics_window: int = 512):
+               clock=None, metrics_window: int = 512,
+               adaptive: bool = False,
+               estimator: Optional[ServiceEstimator] = None,
+               max_batch_seconds: Optional[float] = None,
+               deadline_lookback_s: Optional[float] = None):
     from repro.core import distributed as dist
     valid_schedules = ("auto", "local") + dist.SCHEDULES
     if schedule not in valid_schedules:
@@ -149,9 +169,13 @@ class MMOEngine:
     self._clock = clock if clock is not None else time.perf_counter
     self._decisions: dict = {}  # BucketKey → (backend, block cfg)
     self._schedules: dict = {}  # BucketKey → 'local' | distributed schedule
-    self._predicted: dict = {}  # BucketKey → predicted batch service seconds
+    self._static_cost: dict = {}  # BucketKey → (contraction s, worst trips)
+    self.adaptive = bool(adaptive)
+    self.estimator = estimator if estimator is not None else ServiceEstimator()
     self.scheduler = BucketScheduler(policy=policy, min_bucket=min_bucket,
-                                     max_batch=max_batch, clock=self._clock)
+                                     max_batch=max_batch, clock=self._clock,
+                                     max_batch_seconds=max_batch_seconds,
+                                     deadline_lookback_s=deadline_lookback_s)
     self.scheduler.predict_seconds = self.predict_request_seconds
     if admission is None:
       admission = AdmissionController(max_queue=max_queue,
@@ -191,40 +215,51 @@ class MMOEngine:
       return float(max(1, nb - 1))
     return float(max(1, math.ceil(math.log2(nb))))
 
-  def predict_request_seconds(self, key) -> float:
-    """Predicted service seconds for ONE request of this bucket: the cost
-    table's per-contraction answer (measured row when someone benchmarked
-    the point — for a fixed ``backend`` the table is consulted for that
-    backend's rows too — else the roofline prior) times the bucket's
-    worst-case contraction count.  Batch compute scales linearly with
-    occupied slots, so this is also the request's marginal contribution to
-    a batch and to queue backlog.  What the deadline policy's feasibility
-    check (a lower bound on the serving batch's duration) and the admission
-    controller's backlog accounting consume; memoized per bucket under the
-    engine lock like the dispatch decision itself."""
+  def _static_point(self, key) -> tuple:
+    """(per-contraction seconds, worst-case trips) for one bucket — the
+    static prior the adaptive path corrects.  The per-contraction answer is
+    ``tuning.dispatch.contraction_seconds`` (measured cost-table row when
+    someone benchmarked the point — for a fixed ``backend`` the table is
+    consulted for that backend's rows too — else the roofline prior);
+    memoized per bucket under the engine lock like the dispatch decision
+    itself."""
     with self._lock:
-      s = self._predicted.get(key)
-      if s is None:
+      memo = self._static_cost.get(key)
+      if memo is None:
         m, k, n = contract_shape(key)
         from repro.tuning import dispatch as _dispatch
-        if self.backend == "auto":
-          d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
-                                table=self.cost_table)
-          backend, cfg, s = d.backend, d.cfg, d.seconds
-        else:
-          backend, cfg, s = self.backend, (), float("inf")
-          table = (self.cost_table if self.cost_table is not None
-                   else _dispatch.get_cost_table())
-          best = table.best(key.op, (m, k, n), key.dtypes[0],
-                            backends=(self.backend,)) if table else None
-          if best is not None:
-            cfg, s = best.cfg, best.seconds
-        if not math.isfinite(s):
-          from repro.tuning.cost_table import prior_seconds
-          s = prior_seconds(key.op, (m, k, n), key.dtypes[0], backend, cfg)
-        s *= self._iteration_factor(key)
-        self._predicted[key] = s
-      return s
+        _, _, s = _dispatch.contraction_seconds(
+            key.op, m, k, n, key.dtypes[0], backend=self.backend,
+            table=self.cost_table)
+        memo = (s, self._iteration_factor(key))
+        self._static_cost[key] = memo
+      return memo
+
+  def predict_request(self, key) -> Estimate:
+    """Predicted service seconds for ONE request of this bucket, with its
+    provenance.  Batch compute scales linearly with occupied slots, so this
+    is also the request's marginal contribution to a batch and to queue
+    backlog — what the deadline policy's feasibility check (a lower bound
+    on the serving batch's duration), the admission controller's backlog
+    accounting, and the service-time batch cap all consume.
+
+    Non-adaptive engines answer the static prediction (per-contraction cost
+    × the bucket's worst-case trip count) — the historical behavior.
+    Adaptive engines route through the EWMA estimator, which prefers warm
+    measured service latency, then static cost × measured convergence
+    counts, then the static prediction."""
+    contraction_s, trips = self._static_point(key)
+    if not self.adaptive:
+      return Estimate(contraction_s * trips, "static")
+    with self._lock:
+      backend, _ = self.resolve_backend(key)
+      schedule = self.resolve_schedule(key)
+    return self.estimator.predict(key, backend, schedule, contraction_s,
+                                  trips)
+
+  def predict_request_seconds(self, key) -> float:
+    """``predict_request`` without the provenance — the scheduler hook."""
+    return self.predict_request(key).seconds
 
   def submit(self, req: ProblemRequest) -> MMOFuture:
     """Queue one request; returns its future.  Admission may refuse — the
@@ -245,7 +280,9 @@ class MMOEngine:
       cost = 0.0
       if self.admission.max_backlog_s is not None:
         key = request_bucket(req, self.scheduler.min_bucket)
-        cost = self.predict_request_seconds(key)
+        est = self.predict_request(key)
+        cost = est.seconds
+        req.predicted_source = est.source
       verdict = self.admission.try_admit(req, cost_s=cost)
       if verdict is not None:
         kind, reason = verdict
@@ -406,7 +443,20 @@ class MMOEngine:
                                          interpret=self.interpret,
                                          mesh=self.mesh, schedule=schedule),
           stacked)
+      # estimator observations start AFTER compilation: a cache-miss batch
+      # must not feed trace+compile time (orders of magnitude above steady
+      # service) into the EWMA as if it were device latency
+      executed_s = self._clock()
       out = compiled(*stacked)
+      if key.kind == "closure":
+        # record measured convergence counts the moment the fixpoint has
+        # run — BEFORE splitting/fulfilling, so a batch that fails later in
+        # this step (poisoned split, a bad future callback) still feeds the
+        # estimator what the device actually measured.  Live slots only:
+        # padded slots are copies of the last request and would double-count
+        # its convergence behavior.
+        self.estimator.observe_iterations(
+            key, np.asarray(out[1])[:len(reqs)])
       results = batching.split_results(key, reqs, out)
     except Exception as e:  # noqa: BLE001 — fail the whole batch, keep serving
       with self._lock:
@@ -421,6 +471,14 @@ class MMOEngine:
           self._idle.notify_all()
       return 0
     completed_s = self._clock()
+    # live service-latency feedback: the same signal that fills the metrics
+    # windows (minus compile time — see executed_s above), normalized per
+    # padded slot.  Keyed by the schedule that actually executed — which
+    # resolve_placement may have downgraded to 'local' for this rb — so a
+    # dp cell never averages in local-path latencies; predict() falls back
+    # to the bucket's local cell while its distributed cell is cold.
+    self.estimator.observe_batch(key, backend, schedule, rb,
+                                 completed_s - executed_s)
     with self._lock:
       self._batches += 1
       self.metrics.on_batch()
@@ -506,7 +564,8 @@ class MMOEngine:
       executing = len(self._inflight)
       adm = self.admission.snapshot()
     return self.metrics.snapshot(queue_depth=depth, executing=executing,
-                                 admission=adm)
+                                 admission=adm,
+                                 estimator=self.estimator.snapshot())
 
   def prewarm(self, sample_reqs) -> int:
     """Compile every (bucket, pow2-batch) executable the sample's buckets can

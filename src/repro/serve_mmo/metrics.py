@@ -12,6 +12,13 @@ service latency (batch pick → results ready).  Percentiles come from the
 last ``window`` observations — a rolling estimate that tracks load shifts
 instead of averaging them away.  Global counters (submitted / completed /
 rejected / expired / failed / batches) are plain monotonic ints.
+
+The same per-batch service-latency observations that fill these windows
+also feed the engine's adaptive EWMA estimator (serve_mmo/estimator.py) —
+the windows answer "what happened" for humans and dashboards, the
+estimator answers "what will this cost" for admission, feasibility, and
+batch capping; ``snapshot`` carries both (the engine passes the
+estimator's state in as a gauge).
 """
 from __future__ import annotations
 
@@ -140,13 +147,15 @@ class ServeMetrics:
 
   def snapshot(self, *, queue_depth: Optional[int] = None,
                executing: Optional[int] = None,
-               admission: Optional[dict] = None) -> dict:
+               admission: Optional[dict] = None,
+               estimator: Optional[dict] = None) -> dict:
     """JSON-able point-in-time view.  ``queue_depth`` / ``executing`` /
-    ``admission`` are gauges the engine reads under its own lock and passes
-    in (the registry never reaches back into the engine — no lock-order
-    coupling).  Only O(1)-per-bucket window *copies* happen under the
-    metrics lock; the sorts behind the percentiles run after it is
-    released, so a slow snapshot can never stall the serving hooks."""
+    ``admission`` / ``estimator`` are gauges the engine reads under its own
+    (or the estimator's) lock and passes in (the registry never reaches
+    back into the engine — no lock-order coupling).  Only O(1)-per-bucket
+    window *copies* happen under the metrics lock; the sorts behind the
+    percentiles run after it is released, so a slow snapshot can never
+    stall the serving hooks."""
     with self._lock:
       raw = {label: (b["completed"], b["expired"], b["failed"],
                      b["queue"].values(), b["service"].values())
@@ -177,4 +186,6 @@ class ServeMetrics:
       snap["executing"] = executing
     if admission is not None:
       snap["admission"] = admission
+    if estimator is not None:
+      snap["estimator"] = estimator
     return snap

@@ -9,7 +9,11 @@ The scheduler (``serve_mmo.scheduler.BucketScheduler``) owns request storage
   * ``pick``          chooses which bucket's head batches next,
   * ``fail_fast``     may declare a just-popped request hopeless (its
     deadline cannot be met even if served immediately) so the engine fails
-    it instead of burning a batch slot on a result nobody can use.
+    it instead of burning a batch slot on a result nobody can use,
+  * ``batch_cap``     bounds how many requests the next batch may carry —
+    the service-time-aware preemption cap (``max_batch_seconds``): while
+    deadline traffic is active, bulk batches are kept short enough that an
+    urgent arrival never waits a full max_batch service time behind one.
 
 Three implementations:
 
@@ -114,6 +118,36 @@ class SchedulingPolicy:
   def fail_fast(self, entry: QueueEntry, key, sched, now: float) -> bool:
     """Whether a just-popped request should fail instead of execute."""
     return False
+
+  def batch_cap(self, key, sched, now: float) -> int:
+    """Most requests the next batch from ``key`` may carry — the
+    service-time-aware preemption bound.
+
+    With ``sched.max_batch_seconds`` set and deadline-tagged traffic active
+    (queued, or seen within the scheduler's lookback window), the batch is
+    bounded to the largest power of two whose *predicted* service time
+    (``predict_seconds`` per request × batch size — live EWMA seconds when
+    the engine runs adaptive) fits the cap, so a bulk batch on device can
+    delay an urgent arrival by at most ~max_batch_seconds instead of a full
+    max_batch service time.  Power-of-two flooring matters: the engine pads
+    batches up to the next power of two and computes every padded slot, so
+    an un-floored cap of e.g. 3 would execute 4 slots and overshoot the
+    seconds budget it claims to honor.  Never caps below 1; without a cap
+    (or predictor) the answer is ``sched.max_batch`` — the historical
+    behavior, and full batching efficiency for pure-bulk workloads.
+    """
+    cap_s = getattr(sched, "max_batch_seconds", None)
+    predict = getattr(sched, "predict_seconds", None)
+    if (cap_s is None or predict is None
+        or not sched.deadline_traffic_active(now)):
+      return sched.max_batch
+    per = predict(key)
+    if not (per > 0.0 and math.isfinite(per)):
+      return sched.max_batch
+    allowed = int(cap_s / per)
+    if allowed <= 1:
+      return 1
+    return min(sched.max_batch, 1 << (allowed.bit_length() - 1))
 
   def on_batch(self, key, batch, sched) -> None:
     """Called with every non-empty batch the scheduler built — feedback for

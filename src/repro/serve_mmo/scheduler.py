@@ -20,6 +20,16 @@ absolute ``deadline_at``, and ``next_batch`` diverts requests whose
 deadline already passed — or that the policy declares hopeless — into an
 ``expired`` side channel (``take_expired``) instead of the batch, so the
 engine can fail them without burning executable time.
+
+With ``max_batch_seconds``, batches are additionally *service-time-capped*
+while deadline-tagged traffic is around: the policy's ``batch_cap`` hook
+bounds each batch to roughly that many predicted seconds of work
+(``predict_seconds`` × batch size), so a bulk batch on device can delay an
+urgent arrival by at most the cap instead of a full ``max_batch`` service
+time.  The scheduler tracks whether deadline traffic is queued (a live
+counter) or recent (``deadline_lookback_s`` since the last deadline-tagged
+submit) so pure-bulk workloads keep full batches.  See DESIGN.md §Adaptive
+prediction.
 """
 from __future__ import annotations
 
@@ -83,18 +93,31 @@ class BucketScheduler:
   detection.
   """
 
+  DEADLINE_LOOKBACK_S = 1.0  # default recency window for the batch cap
+
   def __init__(self, *, policy="fifo", min_bucket: int = MIN_BUCKET,
-               max_batch: int = 8, clock=None):
+               max_batch: int = 8, clock=None,
+               max_batch_seconds: Optional[float] = None,
+               deadline_lookback_s: Optional[float] = None):
     if max_batch < 1:
       raise ValueError("max_batch must be >= 1")
+    if max_batch_seconds is not None and not max_batch_seconds > 0.0:
+      raise ValueError(
+          f"max_batch_seconds must be > 0, got {max_batch_seconds}")
     self.policy = make_policy(policy)
     self.min_bucket = min_bucket
     self.max_batch = max_batch
+    self.max_batch_seconds = max_batch_seconds
+    self.deadline_lookback_s = (self.DEADLINE_LOOKBACK_S
+                                if deadline_lookback_s is None
+                                else float(deadline_lookback_s))
     self.predict_seconds = None  # set by the engine (see MMOEngine)
     self._clock = clock if clock is not None else time.perf_counter
     self._buckets: dict[BucketKey, list[QueueEntry]] = {}  # heaps
     self._seq = 0
     self._expired: list[ProblemRequest] = []
+    self._deadline_queued = 0          # deadline-tagged entries not yet popped
+    self._last_deadline_s: Optional[float] = None  # last deadline-tagged add
 
   def __len__(self) -> int:
     return sum(len(q) for q in self._buckets.values())
@@ -106,9 +129,23 @@ class BucketScheduler:
     key = request_bucket(req, self.min_bucket)
     entry = QueueEntry(self._seq, req, self.policy.request_rank(req, now))
     self._seq += 1
+    if req.deadline_at is not None:
+      self._deadline_queued += 1
+      self._last_deadline_s = now
     heapq.heappush(self._buckets.setdefault(key, []), entry)
     self.policy.on_add(entry, key, self)
     return key
+
+  def deadline_traffic_active(self, now: float) -> bool:
+    """Whether the service-time batch cap should bind: deadline-tagged work
+    is queued right now, or arrived within the last ``deadline_lookback_s``
+    (an ongoing deadline stream keeps bulk batches short *between* urgent
+    arrivals — the arrival that benefits from the cap is by definition not
+    queued yet when the bulk batch is built)."""
+    if self._deadline_queued > 0:
+      return True
+    return (self._last_deadline_s is not None
+            and now - self._last_deadline_s <= self.deadline_lookback_s)
 
   def pending_buckets(self) -> dict:
     return {k: len(q) for k, q in self._buckets.items() if q}
@@ -132,11 +169,14 @@ class BucketScheduler:
         self._buckets.pop(key, None)
         continue
       batch = []
-      while heap and len(batch) < self.max_batch:
+      cap = min(self.max_batch, self.policy.batch_cap(key, self, now))
+      while heap and len(batch) < cap:
         entry = heapq.heappop(heap)
         if entry.taken:
           continue
         entry.taken = True
+        if entry.req.deadline_at is not None:
+          self._deadline_queued = max(0, self._deadline_queued - 1)
         deadline = entry.req.deadline_at
         if ((deadline is not None and deadline < now)
             or self.policy.fail_fast(entry, key, self, now)):

@@ -16,13 +16,14 @@ from repro.tuning.cost_table import (CostEntry, CostTable, Decision,
                                      SCHEMA_VERSION, prior_seconds,
                                      sharded_prior_seconds, signature)
 from repro.tuning.autotune import tune, tune_for_requests, tune_mesh
-from repro.tuning.dispatch import (clear_cost_table, get_cost_table, resolve,
-                                   set_cost_table, use_cost_table)
+from repro.tuning.dispatch import (clear_cost_table, contraction_seconds,
+                                   get_cost_table, resolve, set_cost_table,
+                                   use_cost_table)
 
 __all__ = [
     "CostEntry", "CostTable", "Decision", "DEFAULT_CONFIGS", "SCHEDULE_ARMS",
     "SCHEMA_VERSION", "prior_seconds", "sharded_prior_seconds", "signature",
     "tune", "tune_for_requests", "tune_mesh", "clear_cost_table",
-    "get_cost_table",
+    "contraction_seconds", "get_cost_table",
     "resolve", "set_cost_table", "use_cost_table",
 ]

@@ -77,6 +77,37 @@ def use_cost_table(table: Union[CostTable, str, None]):
     set_cost_table(prev)
 
 
+def contraction_seconds(op: str, m: int, k: int, n: int, dtype, *,
+                        backend: str = "auto",
+                        table: Optional[CostTable] = None) -> tuple:
+  """(backend, cfg, seconds) — the *static* per-contraction cost estimate
+  for one bucket signature: the cost table's cheapest row (measured beats
+  prior) under ``backend="auto"``, that backend's best table row for a
+  fixed backend, and the analytic roofline prior when the table holds
+  nothing for the point.  Seconds are always finite.
+
+  This is the hand-off point between dispatch and the serving engine's
+  adaptive estimator (serve_mmo/estimator.py): the value returned here is
+  the estimator's cold-start prior, which live EWMA observations then
+  correct.  Keeping it beside ``resolve`` pins the invariant that the
+  prediction prior and the dispatch decision read the same table the same
+  way.
+  """
+  if backend == "auto":
+    d = resolve(op, m, k, n, dtype, table=table)
+    chosen, cfg, s = d.backend, d.cfg, d.seconds
+  else:
+    chosen, cfg, s = backend, (), float("inf")
+    table = table if table is not None else get_cost_table()
+    best = table.best(op, (m, k, n), dtype,
+                      backends=(backend,)) if table else None
+    if best is not None:
+      cfg, s = best.cfg, best.seconds
+  if not math.isfinite(s):
+    s = prior_seconds(op, (m, k, n), dtype, chosen, cfg)
+  return chosen, cfg, s
+
+
 def resolve(op: str, m: int, k: int, n: int, dtype, *,
             table: Optional[CostTable] = None,
             backends: Optional[Sequence[str]] = None,

@@ -1,0 +1,11 @@
+"""Shared test helpers."""
+
+
+class FakeClock:
+  """Injectable monotonic clock: tests set ``.t`` to move time."""
+
+  def __init__(self, t=0.0):
+    self.t = t
+
+  def __call__(self):
+    return self.t

@@ -1,13 +1,7 @@
 """Elasticity control plane: failure detection, stragglers, re-mesh plan."""
 from repro.launch.elastic import Coordinator, plan_remesh
 
-
-class FakeClock:
-  def __init__(self):
-    self.t = 0.0
-
-  def __call__(self):
-    return self.t
+from conftest import FakeClock
 
 
 def test_failure_detection():

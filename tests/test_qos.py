@@ -13,6 +13,8 @@ from repro.serve_mmo import (AdmissionController, DeadlineExceededError,
 from repro.serve_mmo.scheduler import (BucketScheduler, FifoBucketScheduler,
                                        request_bucket)
 
+from conftest import FakeClock
+
 RNG = np.random.default_rng(0)
 
 
@@ -20,14 +22,6 @@ def _mmo(n, **qos):
   a = RNG.standard_normal((n, n)).astype(np.float32)
   b = RNG.standard_normal((n, n)).astype(np.float32)
   return mmo_request(a, b, op="mma", **qos)
-
-
-class FakeClock:
-  def __init__(self, t=0.0):
-    self.t = t
-
-  def __call__(self):
-    return self.t
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +211,138 @@ def test_heap_pick_matches_linear_scan_reference():
     expect = linear_reference()
     key, _ = sched.next_batch()
     assert key == expect
+
+
+# ---------------------------------------------------------------------------
+# service-time batch cap (max_batch_seconds) — preemption across batches
+# ---------------------------------------------------------------------------
+
+
+def _bulk_sched(clock, max_batch_seconds, per_request_s=1.0, **kw):
+  sched = BucketScheduler(policy="deadline", max_batch=8, clock=clock,
+                          max_batch_seconds=max_batch_seconds, **kw)
+  sched.predict_seconds = lambda key: per_request_s
+  return sched
+
+
+def test_batch_cap_inactive_without_deadline_traffic():
+  """Pure-bulk workloads keep full batches: the cap only binds while
+  deadline-tagged traffic is queued or recent."""
+  clock = FakeClock()
+  sched = _bulk_sched(clock, max_batch_seconds=2.0)
+  for i in range(8):
+    sched.add(_mmo(12))
+  _, batch = sched.next_batch()
+  assert len(batch) == 8
+
+
+def test_batch_cap_bounds_bulk_batches_while_deadline_traffic_queued():
+  """With deadline traffic queued, a bulk batch is bounded to
+  ~max_batch_seconds of predicted work, floored to a power of two (the
+  engine pads batches up to the next power of two and computes every
+  slot, so un-floored caps would overshoot the budget they claim)."""
+  clock = FakeClock()
+  sched = _bulk_sched(clock, max_batch_seconds=3.0)  # 3s / 1s each → 3 → 2
+  for i in range(8):
+    sched.add(_mmo(12))
+  sched.add(_mmo(24, deadline_s=60.0))  # deadline bucket, served first
+  _, urgent_batch = sched.next_batch()
+  assert [r.shape[0] for r in urgent_batch] == [24]
+  _, bulk_batch = sched.next_batch()
+  assert len(bulk_batch) == 2  # pow2 floor of 3
+  # a sub-second budget still serves one request per batch, never zero
+  sched2 = _bulk_sched(clock, max_batch_seconds=0.5)
+  for i in range(4):
+    sched2.add(_mmo(12))
+  sched2.add(_mmo(24, deadline_s=60.0))
+  sched2.next_batch()  # urgent
+  _, bulk = sched2.next_batch()
+  assert len(bulk) == 1
+
+
+def test_batch_cap_recency_window_expires():
+  """An ongoing deadline stream keeps bulk batches short *between* urgent
+  arrivals; once the stream stops (no deadline-tagged submit within the
+  lookback), bulk batching returns to full size."""
+  clock = FakeClock()
+  sched = _bulk_sched(clock, max_batch_seconds=2.0, deadline_lookback_s=1.0)
+  sched.add(_mmo(24, deadline_s=60.0))
+  sched.next_batch()  # drain the urgent bucket; none queued now
+  for i in range(8):
+    sched.add(_mmo(12))
+  clock.t = 0.5  # within the lookback → still capped
+  _, batch = sched.next_batch()
+  assert len(batch) == 2
+  clock.t = 2.0  # lookback expired → full batches again
+  _, batch = sched.next_batch()
+  assert len(batch) == 6
+
+
+def test_batch_cap_survives_bad_predictions():
+  """A predictor that answers 0 / inf / None must disable the cap, not
+  divide by zero or cap everything to nothing."""
+  clock = FakeClock()
+  for bad in (lambda k: 0.0, lambda k: float("inf"), None):
+    sched = BucketScheduler(policy="deadline", max_batch=4, clock=clock,
+                            max_batch_seconds=1.0)
+    sched.predict_seconds = bad
+    sched.add(_mmo(24, deadline_s=60.0))
+    sched.next_batch()
+    for i in range(4):
+      sched.add(_mmo(12))
+    _, batch = sched.next_batch()
+    assert len(batch) == 4
+
+
+def test_preemption_deadline_met_with_cap_missed_without():
+  """The ROADMAP scenario, end to end through the engine with an injectable
+  clock (no real sleeps): an urgent request arriving mid-bulk-burst meets
+  its deadline under service-time batch capping and misses it without.
+
+  The cost table prices one bulk closure request at 1s (0.25s/contraction ×
+  lg(16)=4 squarings); execution time is *simulated* by advancing the fake
+  clock by the batch's predicted duration after each step.  Uncapped, the
+  first bulk batch holds all 8 requests → the urgent arrival (deadline 3.0s
+  absolute) next gets a pick at t=8 and expires.  Capped at 2s of predicted
+  work, batches hold 2 requests → the urgent arrival is picked at t=2 and
+  completes inside its budget."""
+  from repro.tuning import CostTable
+  table = CostTable(device="test")
+  table.record("minplus", (16, 16, 16), "float32", "xla", (512,), 0.25)
+  table.record("mma", (16, 16, 16), "float32", "xla", (512,), 0.01)
+
+  def run(max_batch_seconds):
+    clock = FakeClock()
+    eng = MMOEngine(backend="xla", max_batch=8, policy="deadline",
+                    cost_table=table, clock=clock,
+                    max_batch_seconds=max_batch_seconds,
+                    deadline_lookback_s=60.0)
+    # an earlier urgent request establishes the deadline stream (the cap
+    # protects the *next* arrival, which is not queued yet by definition)
+    first = eng.submit(_mmo(12, deadline_s=10.0, priority=1))
+    bulk = [eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=i),
+                                    tenant="bulk")) for i in range(8)]
+    assert eng.step() == 1 and first.state == "done"  # urgent bucket first
+    # bulk batch begins at t=0; the urgent request arrives mid-execution
+    served = eng.step()
+    clock.t = 0.5
+    urgent = eng.submit(_mmo(12, deadline_s=2.5, priority=1))
+    clock.t = float(served) * 1.0  # the batch's simulated service time
+    eng.step()  # first pick the urgent arrival can get
+    eng.run_until_idle()
+    assert all(f.state == "done" for f in bulk)
+    return served, urgent
+
+  served, urgent = run(max_batch_seconds=None)
+  assert served == 8  # uncapped: the whole burst in one batch
+  assert urgent.state == "expired"
+  with pytest.raises(DeadlineExceededError):
+    urgent.result()
+
+  served, urgent = run(max_batch_seconds=2.0)
+  assert served == 2  # capped: ~2s of predicted work per batch
+  assert urgent.state == "done"
+  assert urgent.result().value.shape == (12, 12)
 
 
 # ---------------------------------------------------------------------------

@@ -502,3 +502,43 @@ def test_batch_failure_fails_futures_and_keeps_serving(monkeypatch):
   ref, _ = solvers.apsp(graphs.weighted_digraph(12, 0.3, seed=9))
   np.testing.assert_allclose(ok.result().value, np.asarray(ref), atol=1e-5)
   assert eng._inflight == set() and eng.pending() == 0
+
+
+def test_poisoned_batch_still_records_measured_iterations(monkeypatch):
+  """Regression: measured closure convergence counts feed the adaptive
+  estimator the moment the fixpoint has run — a batch that fails *after*
+  execution (poisoned split_results) must still contribute its iteration
+  observations, or serving pathologies would systematically starve the
+  estimator exactly when the device is misbehaving.  Failed batches must
+  NOT contribute service-seconds observations (no result was produced to
+  time)."""
+  from repro.serve_mmo import batching as batching_mod
+
+  eng = MMOEngine(backend="xla", max_batch=4)
+  key = None
+  for i in range(3):
+    req = apsp_request(graphs.weighted_digraph(12, 0.3, seed=i))
+    key = key or request_bucket(req)
+    eng.submit(req)
+
+  real_split = batching_mod.split_results
+  monkeypatch.setattr(
+      batching_mod, "split_results",
+      lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("poisoned split")))
+  assert eng.step() == 0  # the fixpoint ran; splitting its results failed
+  snap = eng.estimator.snapshot()
+  (label,) = snap["iterations"]
+  assert label.startswith("closure/minplus")
+  it = snap["iterations"][label]
+  assert it["observations"] == 1 and 1.0 <= it["iterations"] <= 4.0
+  # only the live slots count — a padded 4-batch of 3 requests must not
+  # average the 4th (copied) slot's convergence into the estimate
+  assert snap["cells"] == {}  # no seconds observation from a failed batch
+
+  # and the estimator keeps accumulating once the engine recovers
+  monkeypatch.setattr(batching_mod, "split_results", real_split)
+  ok = eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=9)))
+  assert eng.run_until_idle() == 1 and ok.state == "done"
+  snap = eng.estimator.snapshot()
+  assert snap["iterations"][label]["observations"] == 2
+  assert any(lab.startswith("closure/minplus") for lab in snap["cells"])
