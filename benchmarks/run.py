@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
              re-execs itself with 8 fake host devices on CPU)
   §QoS       qos_bench (deadline vs FIFO under bulk interference, admission
              bounding, scheduler pick cost → BENCH_qos.json)
+  §Serving   serve_bench (bucketed engine vs naive loop, zero-recompile
+             steady state, observability overhead < 5% → BENCH_serve.json)
 """
 from __future__ import annotations
 
@@ -20,7 +22,8 @@ import traceback
 def main() -> None:
   from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
                           microbench_shapes, microbench_square, qos_bench,
-                          roofline_table, shard_bench, sparse_bench)
+                          roofline_table, serve_bench, shard_bench,
+                          sparse_bench)
   print("name,us_per_call,derived")
   suites = (
       ("fig9", microbench_square.main),
@@ -33,6 +36,7 @@ def main() -> None:
       ("dispatch", dispatch_bench.main),
       ("shard", shard_bench.main),
       ("qos", qos_bench.main),
+      ("serve", serve_bench.main),
   )
   failed = []
   for name, fn in suites:

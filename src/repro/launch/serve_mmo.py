@@ -19,6 +19,12 @@
     PYTHONPATH=src python -m repro.launch.serve_mmo --policy deadline \
         --deadline-s 0.25 --adaptive --max-batch-seconds 0.02 --rate 80
 
+    # live observability: Prometheus /metrics + /healthz + /snapshot +
+    # /trace on :9178 while serving; Chrome trace dumped at the end
+    PYTHONPATH=src python -m repro.launch.serve_mmo --http-port 9178 \
+        --rate 40 --duration 10 --trace-out /tmp/serve_trace.json
+    # (curl localhost:9178/metrics from another terminal)
+
 Generates a Poisson arrival stream of mixed SIMD² problems (APSP, KNN,
 reachability, raw mmo at several sizes), submits each request at its arrival
 time against the engine's background serving loop, and reports throughput
@@ -147,9 +153,30 @@ def main(argv=None):
   ap.add_argument("--deadline-frac", type=float, default=0.25,
                   help="share of traffic carrying --deadline-s (default .25)")
   ap.add_argument("--metrics-every", type=float, default=None, metavar="SECS",
-                  help="print a live metrics snapshot (rolling p50/p99 per "
+                  help="emit a live metrics snapshot (rolling p50/p99 per "
                        "bucket, queue depth, admission state) every SECS "
-                       "while serving")
+                       "while serving — to stderr (or --metrics-file) so the "
+                       "ticker never interleaves with stdout results")
+  ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                  help="append --metrics-every snapshots to PATH as JSON "
+                       "lines instead of stderr")
+  ap.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                  help="serve the live observability endpoint on PORT: "
+                       "/metrics (Prometheus text exposition), /healthz, "
+                       "/snapshot (metrics JSON), /trace (Chrome trace-event "
+                       "JSON for Perfetto).  0 picks an ephemeral port")
+  ap.add_argument("--http-host", default="127.0.0.1",
+                  help="bind address for --http-port (default loopback)")
+  ap.add_argument("--http-linger", type=float, default=0.0, metavar="SECS",
+                  help="keep the observability endpoint up SECS after the "
+                       "run drains (lets a scraper collect final state)")
+  ap.add_argument("--no-trace", action="store_true",
+                  help="disable the request-lifecycle flight recorder "
+                       "(tracing is on by default; overhead is bounded and "
+                       "asserted in benchmarks/serve_bench.py)")
+  ap.add_argument("--trace-out", default=None, metavar="PATH",
+                  help="write the flight recorder's Chrome trace JSON to "
+                       "PATH at the end of the run")
   args = ap.parse_args(argv)
 
   try:
@@ -216,7 +243,16 @@ def main(argv=None):
                      tenant_quota=args.tenant_quota,
                      max_backlog_s=args.max_backlog_s,
                      adaptive=args.adaptive,
-                     max_batch_seconds=args.max_batch_seconds)
+                     max_batch_seconds=args.max_batch_seconds,
+                     trace=not args.no_trace)
+
+  http_server = None
+  if args.http_port is not None:
+    from repro.serve_mmo import ObservabilityServer
+    http_server = ObservabilityServer(engine, host=args.http_host,
+                                      port=args.http_port).start()
+    print(f"[serve_mmo] observability endpoint at {http_server.url} "
+          f"(/metrics /healthz /snapshot /trace)")
 
   if not args.no_warmup:
     t0 = time.perf_counter()
@@ -235,10 +271,19 @@ def main(argv=None):
 
   ticker_stop = threading.Event()
   if args.metrics_every:
+    # the ticker writes to stderr (or --metrics-file), never stdout: the
+    # driver's results go to stdout and a mid-line ticker fire would corrupt
+    # both streams for anything parsing them
     def tick():
-      while not ticker_stop.wait(args.metrics_every):
-        print(f"[serve_mmo][metrics] "
-              f"{json.dumps(engine.metrics_snapshot(), default=float)}")
+      sink = (open(args.metrics_file, "a", encoding="utf-8")
+              if args.metrics_file else sys.stderr)
+      try:
+        while not ticker_stop.wait(args.metrics_every):
+          line = json.dumps(engine.metrics_snapshot(), default=float)
+          print(f"[serve_mmo][metrics] {line}", file=sink, flush=True)
+      finally:
+        if args.metrics_file:
+          sink.close()
     threading.Thread(target=tick, name="mmo-metrics", daemon=True).start()
 
   engine.start()
@@ -263,6 +308,17 @@ def main(argv=None):
   wall = time.perf_counter() - t0
   engine.stop()
   ticker_stop.set()
+  if args.trace_out:
+    with open(args.trace_out, "w", encoding="utf-8") as f:
+      json.dump(engine.export_trace(), f)
+    print(f"[serve_mmo] wrote Chrome trace ({engine.tracer.stats()}) to "
+          f"{args.trace_out} — load it in Perfetto / about://tracing")
+  if http_server is not None:
+    if args.http_linger > 0:
+      print(f"[serve_mmo] endpoint lingering {args.http_linger:g}s at "
+            f"{http_server.url}")
+      time.sleep(args.http_linger)
+    http_server.stop()
 
   st = engine.stats()
   misses_during = engine.cache.misses - misses_before

@@ -29,7 +29,16 @@ them serving workloads, not one-shot library calls.  This package turns the
   cache.py      — AOT executable cache keyed by (bucket, batch, backend) so
                   steady-state traffic never retraces,
   engine.py     — the engine: submit()/futures, synchronous step() or a
-                  background serving loop, per-request latency stats.
+                  background serving loop, per-request latency stats,
+  observability.py — request-lifecycle tracer: a bounded ring-buffer flight
+                  recorder of per-request/per-batch spans, exportable as
+                  Chrome trace-event JSON (Perfetto / about://tracing),
+  exposition.py — dependency-free Prometheus text exposition over the
+                  engine's counters, log-bucketed latency histograms,
+                  gauges, and estimator-vs-static drift,
+  httpd.py      — stdlib HTTP endpoint serving /metrics /healthz /snapshot
+                  /trace next to a live engine (``--http-port`` in
+                  launch/serve_mmo.py).
 
 Quickstart::
 
@@ -51,7 +60,10 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.engine import EngineStats, MMOEngine
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
-from repro.serve_mmo.metrics import RollingWindow, ServeMetrics
+from repro.serve_mmo.exposition import LogHistogram, render_prometheus
+from repro.serve_mmo.httpd import ObservabilityServer
+from repro.serve_mmo.metrics import RollingWindow, ServeMetrics, bucket_label
+from repro.serve_mmo.observability import FlightRecorder
 from repro.serve_mmo.policy import (DeadlinePolicy, FairSharePolicy,
                                     FifoPolicy, SchedulingPolicy, make_policy)
 from repro.serve_mmo.scheduler import (BucketKey, BucketScheduler,
@@ -77,6 +89,11 @@ __all__ = [
     "Estimate",
     "ServeMetrics",
     "RollingWindow",
+    "bucket_label",
+    "FlightRecorder",
+    "ObservabilityServer",
+    "LogHistogram",
+    "render_prometheus",
     "RejectedError",
     "DeadlineExceededError",
     "mmo_request",

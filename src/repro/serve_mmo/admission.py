@@ -60,6 +60,7 @@ class AdmissionController:
     self.backlog_s = 0.0                    # predicted seconds to drain queue
     self.inflight = collections.Counter()   # tenant → queued + executing
     self.rejections = collections.Counter() # reason kind → count
+    self.evaluations = 0                    # try_admit calls (admit + reject)
 
   @property
   def unbounded(self) -> bool:
@@ -80,6 +81,7 @@ class AdmissionController:
     stamped) or reject it (returns a ``(kind, reason)`` pair — the short
     kind for metrics, the human-readable reason for the error; nothing
     charged)."""
+    self.evaluations += 1
     if self.max_queue is not None and self.queued >= self.max_queue:
       self.rejections["queue_full"] += 1
       return ("queue_full", f"queue full: {self.queued} queued >= "
@@ -124,6 +126,7 @@ class AdmissionController:
         "backlog_s": self.backlog_s,
         "inflight": dict(self.inflight),
         "rejections": dict(self.rejections),
+        "evaluations": self.evaluations,
         "limits": {"max_queue": self.max_queue,
                    "tenant_quota": (dict(self.tenant_quota)
                                     if isinstance(self.tenant_quota, dict)

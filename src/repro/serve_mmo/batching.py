@@ -94,6 +94,12 @@ def stack_batch(key: BucketKey, reqs: Sequence[ProblemRequest]):
   raise ValueError(f"unknown kind {key.kind!r}")
 
 
+def stacked_nbytes(stacked) -> int:
+  """Bytes one stacked batch stages host→device (pads included) — the H2D
+  traffic gauge the engine's metrics and trace spans report per batch."""
+  return sum(int(a.nbytes) for a in stacked)
+
+
 def abstract_batch(key: BucketKey, batch: int):
   """ShapeDtypeStructs matching ``stack_batch``'s output for ``batch``
   requests — lets prewarm compile executables without materializing data."""

@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.serve_mmo import batching
@@ -36,7 +37,9 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture,
                                  ProblemRequest, RejectedError)
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
-from repro.serve_mmo.metrics import ServeMetrics
+from repro.serve_mmo.metrics import ServeMetrics, bucket_label
+from repro.serve_mmo.observability import (DEFAULT_TRACE_CAPACITY,
+                                           FlightRecorder)
 from repro.serve_mmo.scheduler import (BucketScheduler, MIN_BUCKET,
                                        bucket_dim, contract_shape,
                                        request_bucket)
@@ -136,6 +139,17 @@ class MMOEngine:
   never waits a full max_batch service time behind one (see
   ``SchedulingPolicy.batch_cap``).  Neither knob changes dispatch decisions
   or executable-cache keys, so steady state still never retraces.
+
+  Observability: the engine stamps request-lifecycle spans (submit,
+  queued, batch pick, pad-and-stack, compile, device compute, split, done/
+  expired/failed) into a bounded flight recorder
+  (serve_mmo/observability.py; ``trace=False`` turns it off,
+  ``export_trace()`` returns Chrome trace-event JSON), measures every
+  batch's host vs device time breakdown into the metrics registry, and
+  assembles ``observability_state()`` — the snapshot the Prometheus
+  renderer (serve_mmo/exposition.py) and the HTTP endpoint
+  (serve_mmo/httpd.py) serve.  Tracing is on by default; its steady-state
+  overhead is asserted < 5% in benchmarks/serve_bench.py.
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
@@ -150,7 +164,10 @@ class MMOEngine:
                adaptive: bool = False,
                estimator: Optional[ServiceEstimator] = None,
                max_batch_seconds: Optional[float] = None,
-               deadline_lookback_s: Optional[float] = None):
+               deadline_lookback_s: Optional[float] = None,
+               trace: bool = True,
+               trace_capacity: int = DEFAULT_TRACE_CAPACITY,
+               tracer: Optional[FlightRecorder] = None):
     from repro.core import distributed as dist
     valid_schedules = ("auto", "local") + dist.SCHEDULES
     if schedule not in valid_schedules:
@@ -183,6 +200,8 @@ class MMOEngine:
                                       max_backlog_s=max_backlog_s)
     self.admission = admission
     self.metrics = ServeMetrics(clock=self._clock, window=metrics_window)
+    self.tracer = tracer if tracer is not None else FlightRecorder(
+        capacity=trace_capacity, clock=self._clock, enabled=trace)
     self.cache = ExecutableCache()
     self._lock = threading.RLock()
     self._work = threading.Condition(self._lock)
@@ -288,11 +307,16 @@ class MMOEngine:
         kind, reason = verdict
         self._rejected += 1
         self.metrics.on_reject(kind)
+        self.tracer.request_rejected(req.request_id, kind, kind=req.kind,
+                                     op=req.op, tenant=req.tenant,
+                                     t_s=req.arrival_s)
         fut._fail(RejectedError(
             f"request {req.request_id} ({req.kind}/{req.op}) rejected: "
             f"{reason}"))
         return fut
       self.metrics.on_submit()
+      self.tracer.request_begin(req.request_id, kind=req.kind, op=req.op,
+                                tenant=req.tenant, t_s=req.arrival_s)
       self.scheduler.add(req)
       self._pending[req.request_id] = fut
       self._work.notify()
@@ -407,6 +431,7 @@ class MMOEngine:
       self.admission.on_dequeue(r)
       self.admission.on_done(r)
       self.metrics.on_expire(request_bucket(r, self.scheduler.min_bucket))
+      self.tracer.request_end(r.request_id, "expired", executing=False)
       fut = self._pending.pop(r.request_id, None)
       if fut is not None:
         fut._fail(DeadlineExceededError(
@@ -432,22 +457,33 @@ class MMOEngine:
       self._inflight.update(r.request_id for r in reqs)
     scheduled_s = self._clock()
     rb = self._batch_bucket(len(reqs))
+    iters_live = None
     try:
       # fill the padded batch slots with copies of the last request — wasted
       # compute bounded at 2×, in exchange for a bounded executable set
       stacked = batching.stack_batch(key, reqs + [reqs[-1]] * (rb - len(reqs)))
+      h2d_bytes = batching.stacked_nbytes(stacked)
+      stacked_s = self._clock()
       backend, block, schedule = self.resolve_placement(key, rb)
+      misses_before = self.cache.misses
       compiled = self.cache.get_or_compile(
           self._exec_key(key, rb, backend, block, schedule),
           lambda: batching.make_batch_fn(key, backend=backend, block=block,
                                          interpret=self.interpret,
                                          mesh=self.mesh, schedule=schedule),
           stacked)
+      cache_hit = self.cache.misses == misses_before
       # estimator observations start AFTER compilation: a cache-miss batch
       # must not feed trace+compile time (orders of magnitude above steady
       # service) into the EWMA as if it were device latency
       executed_s = self._clock()
       out = compiled(*stacked)
+      # block on the device result here so the device-compute window
+      # (executed_s → device_s) is honest: jax dispatch is async, and
+      # without the sync split_results' first np.asarray would absorb the
+      # whole device time into the host-side split span
+      jax.block_until_ready(out)
+      device_s = self._clock()
       if key.kind == "closure":
         # record measured convergence counts the moment the fixpoint has
         # run — BEFORE splitting/fulfilling, so a batch that fails later in
@@ -455,8 +491,8 @@ class MMOEngine:
         # estimator what the device actually measured.  Live slots only:
         # padded slots are copies of the last request and would double-count
         # its convergence behavior.
-        self.estimator.observe_iterations(
-            key, np.asarray(out[1])[:len(reqs)])
+        iters_live = np.asarray(out[1])[:len(reqs)]
+        self.estimator.observe_iterations(key, iters_live)
       results = batching.split_results(key, reqs, out)
     except Exception as e:  # noqa: BLE001 — fail the whole batch, keep serving
       with self._lock:
@@ -464,11 +500,17 @@ class MMOEngine:
           self._inflight.discard(r.request_id)
           self.admission.on_done(r)
           self.metrics.on_fail(key)
+          self.tracer.request_picked(r.request_id, t_s=scheduled_s)
+          self.tracer.request_end(r.request_id, "failed", executing=True,
+                                  args={"error": type(e).__name__})
           fut = self._pending.pop(r.request_id, None)
           if fut is not None:
             fut._fail(e)
         if not self._pending:
           self._idle.notify_all()
+      self.tracer.instant("batch_fail", cat="batch",
+                          args={"bucket": bucket_label(key),
+                                "error": type(e).__name__})
       return 0
     completed_s = self._clock()
     # live service-latency feedback: the same signal that fills the metrics
@@ -479,9 +521,26 @@ class MMOEngine:
     # to the bucket's local cell while its distributed cell is cold.
     self.estimator.observe_batch(key, backend, schedule, rb,
                                  completed_s - executed_s)
+    if self.tracer.enabled:
+      # emitted after the batch, with the timestamps measured above — the
+      # spans are exact but their recording cost sits outside the measured
+      # windows.  One call carries the whole batch's event set (phase spans,
+      # iteration slices, every member's pick + done) so the steady-state
+      # tracing cost is one lock acquisition per batch, not per request.
+      self.tracer.batch_complete(
+          label=bucket_label(key), scheduled_s=scheduled_s,
+          stacked_s=stacked_s, executed_s=executed_s, device_s=device_s,
+          completed_s=completed_s, backend=backend, schedule=schedule,
+          batch=len(reqs), padded=rb, h2d_bytes=h2d_bytes,
+          cache_hit=cache_hit,
+          request_ids=[r.request_id for r in reqs],
+          arrivals_s=[r.arrival_s for r in reqs],
+          iterations=iters_live)
     with self._lock:
       self._batches += 1
-      self.metrics.on_batch()
+      self.metrics.on_batch(
+          key, host_s=(stacked_s - scheduled_s) + (completed_s - device_s),
+          device_s=device_s - executed_s, h2d_bytes=h2d_bytes)
       for r in reqs:
         self._inflight.discard(r.request_id)
       for r, res in zip(reqs, results):
@@ -566,6 +625,46 @@ class MMOEngine:
     return self.metrics.snapshot(queue_depth=depth, executing=executing,
                                  admission=adm,
                                  estimator=self.estimator.snapshot())
+
+  def observability_state(self) -> dict:
+    """Everything the Prometheus renderer (serve_mmo/exposition.py) emits,
+    in one point-in-time document: metrics counters + histogram state,
+    queue/executing gauges, admission + cache + scheduler counters, the
+    estimator's cells with their drift against the static cost model
+    (measured EWMA / static prediction — the model-vs-reality gauge), and
+    flight-recorder stats.  Gauges are read under the engine lock; the
+    per-cell drift math runs outside it."""
+    with self._lock:
+      depth = len(self.scheduler)
+      executing = len(self._inflight)
+      adm = self.admission.snapshot()
+      sched = {"picks": self.scheduler.picks,
+               "pick_seconds": self.scheduler.pick_seconds}
+    cells = []
+    for key, backend, schedule, seconds, count in self.estimator.cells_raw():
+      contraction_s, trips = self._static_point(key)
+      static_s = contraction_s * trips
+      cells.append({
+          "bucket": bucket_label(key), "backend": backend,
+          "schedule": schedule, "seconds": seconds, "observations": count,
+          "drift": (seconds / static_s) if static_s > 0.0 else None,
+      })
+    return {
+        "metrics": self.metrics.exposition_state(),
+        "queue_depth": depth,
+        "executing": executing,
+        "admission": adm,
+        "cache": self.cache.stats(),
+        "scheduler": sched,
+        "estimator_cells": cells,
+        "trace": self.tracer.stats(),
+    }
+
+  def export_trace(self) -> dict:
+    """The flight recorder's Chrome trace-event JSON (load in Perfetto or
+    about://tracing) — per-request lifecycle spans plus per-batch
+    host/device phase breakdown.  See serve_mmo/observability.py."""
+    return self.tracer.export()
 
   def prewarm(self, sample_reqs) -> int:
     """Compile every (bucket, pow2-batch) executable the sample's buckets can

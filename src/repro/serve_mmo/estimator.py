@@ -183,6 +183,16 @@ class ServiceEstimator:
       cell = self._cells.get((key, backend, schedule))
       return cell.count if cell is not None else 0
 
+  def cells_raw(self) -> list:
+    """Every live cell as (bucket key, backend, schedule, ewma seconds,
+    observation count) tuples — the unformatted view the engine's
+    observability state uses to compute per-cell drift against the static
+    cost model (the keys stay real BucketKeys so the engine can price the
+    static side; ``snapshot`` is the label-formatted JSON counterpart)."""
+    with self._lock:
+      return [(k, b, s, c.value, c.count)
+              for (k, b, s), c in self._cells.items()]
+
   # -- reading ----------------------------------------------------------------
 
   def snapshot(self) -> dict:

@@ -7,11 +7,23 @@ background serving loop is mid-batch (no stop, no drain).  That is what a
 metrics endpoint / ``launch/serve_mmo.py --metrics-every`` needs: p99 *now*,
 not p99 after the run.
 
-Per bucket, two rolling windows: queue latency (submit → batch pick) and
-service latency (batch pick → results ready).  Percentiles come from the
-last ``window`` observations — a rolling estimate that tracks load shifts
-instead of averaging them away.  Global counters (submitted / completed /
-rejected / expired / failed / batches) are plain monotonic ints.
+Per bucket, rolling windows for queue latency (submit → batch pick) and
+service latency (batch pick → results ready), plus per-batch host time
+(pad-and-stack + split) and device compute time — the host/device breakdown
+the engine measures around each batch.  Percentiles come from the last
+``window`` observations — a rolling estimate that tracks load shifts
+instead of averaging them away.  A window that has seen nothing reports its
+percentiles as ``None`` (never NaN: ``json.dumps`` renders NaN as the
+bareword ``NaN``, which is not strict JSON — a bucket created by
+``on_expire`` alone must still snapshot to parseable output).
+
+Alongside each window sits a fixed log-bucketed cumulative histogram
+(serve_mmo/exposition.py) — the form Prometheus can aggregate across
+scrapes and instances; the windows answer "now" for humans, the histograms
+answer "since start" for the scraper.
+
+Global counters (submitted / completed / rejected / expired / failed /
+batches / h2d_bytes) are plain monotonic ints.
 
 The same per-batch service-latency observations that fill these windows
 also feed the engine's adaptive EWMA estimator (serve_mmo/estimator.py) —
@@ -25,6 +37,8 @@ from __future__ import annotations
 import threading
 import time
 from typing import Optional
+
+from repro.serve_mmo.exposition import HISTOGRAM_BOUNDS_S, LogHistogram
 
 __all__ = ["RollingWindow", "ServeMetrics", "bucket_label"]
 
@@ -56,24 +70,38 @@ class RollingWindow:
   def values(self) -> list:
     return list(self._buf[:min(self._n, self._size)])
 
-  def percentile(self, q: float) -> float:
+  def percentile(self, q: float) -> Optional[float]:
+    """Nearest-rank percentile of the live slots, or None when empty."""
     return _rank(sorted(self.values()), q)
 
 
-def _rank(sorted_vals: list, q: float) -> float:
+def _rank(sorted_vals: list, q: float) -> Optional[float]:
   """Nearest-rank percentile over a pre-sorted list (no numpy on the
-  metrics path)."""
+  metrics path).  Empty windows answer ``None`` — the JSON-safe spelling of
+  "no data" (``float('nan')`` serializes as bareword ``NaN``, breaking any
+  strict parser downstream of the snapshot)."""
   if not sorted_vals:
-    return float("nan")
+    return None
   idx = min(len(sorted_vals) - 1,
             max(0, round(q / 100.0 * (len(sorted_vals) - 1))))
   return sorted_vals[int(idx)]
 
 
+def _ms(seconds: Optional[float]) -> Optional[float]:
+  return None if seconds is None else seconds * 1e3
+
+
 def bucket_label(key) -> str:
-  """Compact human/JSON label for one BucketKey."""
+  """Compact human/JSON label for one BucketKey.  Uniform-dtype buckets (the
+  overwhelming majority) keep the historical single-dtype spelling; mixed
+  operand dtypes are all spelled out, so two buckets differing only in a
+  non-leading operand dtype can never collide under one label."""
   shape = "x".join(str(d) for d in key.shape)
-  return f"{key.kind}/{key.op}/{shape}/{key.dtypes[0]}"
+  if len(set(key.dtypes)) <= 1:
+    dtypes = key.dtypes[0]
+  else:
+    dtypes = "+".join(key.dtypes)
+  return f"{key.kind}/{key.op}/{shape}/{dtypes}"
 
 
 class ServeMetrics:
@@ -86,7 +114,8 @@ class ServeMetrics:
   """
 
   COUNTERS = ("submitted", "completed", "rejected", "expired", "failed",
-              "batches")
+              "batches", "h2d_bytes")
+  WINDOWS = ("queue", "service", "host", "device")
 
   def __init__(self, *, clock=None, window: int = 512):
     self._clock = clock if clock is not None else time.perf_counter
@@ -95,7 +124,7 @@ class ServeMetrics:
     self._started_s = self._clock()
     self._counters = {name: 0 for name in self.COUNTERS}
     self._rejected_by_reason: dict[str, int] = {}
-    self._buckets: dict[str, dict] = {}  # label → {queue, service: RollingWindow}
+    self._buckets: dict[str, dict] = {}  # label → windows + histograms
 
   # -- engine hooks ------------------------------------------------------------
 
@@ -103,9 +132,11 @@ class ServeMetrics:
     label = bucket_label(key)
     b = self._buckets.get(label)
     if b is None:
-      b = self._buckets[label] = {"queue": RollingWindow(self._window),
-                                  "service": RollingWindow(self._window),
-                                  "completed": 0, "expired": 0, "failed": 0}
+      b = self._buckets[label] = {
+          "completed": 0, "expired": 0, "failed": 0,
+          **{name: RollingWindow(self._window) for name in self.WINDOWS},
+          **{f"{name}_hist": LogHistogram() for name in self.WINDOWS},
+      }
     return b
 
   def on_submit(self) -> None:
@@ -127,9 +158,24 @@ class ServeMetrics:
       self._counters["failed"] += 1
       self._bucket(key)["failed"] += 1
 
-  def on_batch(self) -> None:
+  def on_batch(self, key=None, *, host_s: Optional[float] = None,
+               device_s: Optional[float] = None,
+               h2d_bytes: Optional[int] = None) -> None:
+    """One executed batch.  With a bucket key, also records the batch's
+    host/device time breakdown (host = pad-and-stack + split-results,
+    device = compiled-program execution) and the bytes staged host→device."""
     with self._lock:
       self._counters["batches"] += 1
+      if h2d_bytes:
+        self._counters["h2d_bytes"] += int(h2d_bytes)
+      if key is not None:
+        b = self._bucket(key)
+        if host_s is not None:
+          b["host"].add(host_s)
+          b["host_hist"].add(host_s)
+        if device_s is not None:
+          b["device"].add(device_s)
+          b["device_hist"].add(device_s)
 
   def on_complete(self, key, queue_s: float, service_s: float) -> None:
     with self._lock:
@@ -137,7 +183,9 @@ class ServeMetrics:
       b = self._bucket(key)
       b["completed"] += 1
       b["queue"].add(queue_s)
+      b["queue_hist"].add(queue_s)
       b["service"].add(service_s)
+      b["service_hist"].add(service_s)
 
   # -- reading -----------------------------------------------------------------
 
@@ -155,10 +203,11 @@ class ServeMetrics:
     back into the engine — no lock-order coupling).  Only O(1)-per-bucket
     window *copies* happen under the metrics lock; the sorts behind the
     percentiles run after it is released, so a slow snapshot can never
-    stall the serving hooks."""
+    stall the serving hooks.  Strict-JSON safe: empty windows report their
+    percentiles as None, never NaN."""
     with self._lock:
       raw = {label: (b["completed"], b["expired"], b["failed"],
-                     b["queue"].values(), b["service"].values())
+                     {name: b[name].values() for name in self.WINDOWS})
              for label, b in self._buckets.items()}
       snap = {
           "uptime_s": self._clock() - self._started_s,
@@ -166,19 +215,14 @@ class ServeMetrics:
           "rejected_by_reason": dict(self._rejected_by_reason),
       }
     buckets = {}
-    for label, (completed, expired, failed, queue_v, service_v) in raw.items():
-      queue_v.sort()
-      service_v.sort()
-      buckets[label] = {
-          "completed": completed,
-          "expired": expired,
-          "failed": failed,
-          "queue_ms": {"p50": _rank(queue_v, 50) * 1e3,
-                       "p99": _rank(queue_v, 99) * 1e3},
-          "service_ms": {"p50": _rank(service_v, 50) * 1e3,
-                         "p99": _rank(service_v, 99) * 1e3},
-          "window": len(queue_v),
-      }
+    for label, (completed, expired, failed, windows) in raw.items():
+      stanza = {"completed": completed, "expired": expired, "failed": failed}
+      for name, vals in windows.items():
+        vals.sort()
+        stanza[f"{name}_ms"] = {"p50": _ms(_rank(vals, 50)),
+                                "p99": _ms(_rank(vals, 99))}
+      stanza["window"] = len(windows["queue"])
+      buckets[label] = stanza
     snap["buckets"] = buckets
     if queue_depth is not None:
       snap["queue_depth"] = queue_depth
@@ -189,3 +233,27 @@ class ServeMetrics:
     if estimator is not None:
       snap["estimator"] = estimator
     return snap
+
+  def exposition_state(self) -> dict:
+    """Raw counter + histogram state for the Prometheus renderer
+    (serve_mmo/exposition.py): per-bucket cumulative histogram (counts,
+    sum, count) tuples copied under the lock, shared fixed boundaries."""
+    with self._lock:
+      buckets = {
+          label: {
+              "completed": b["completed"],
+              "expired": b["expired"],
+              "failed": b["failed"],
+              "histograms": {name: b[f"{name}_hist"].state()
+                             for name in self.WINDOWS
+                             if b[f"{name}_hist"].count},
+          }
+          for label, b in self._buckets.items()
+      }
+      return {
+          "uptime_s": self._clock() - self._started_s,
+          "counters": dict(self._counters),
+          "rejected_by_reason": dict(self._rejected_by_reason),
+          "histogram_bounds_s": list(HISTOGRAM_BOUNDS_S),
+          "buckets": buckets,
+      }

@@ -115,6 +115,13 @@ class BucketScheduler:
     self._clock = clock if clock is not None else time.perf_counter
     self._buckets: dict[BucketKey, list[QueueEntry]] = {}  # heaps
     self._seq = 0
+    # observability counters (read by MMOEngine.observability_state): how
+    # many batches the policy picked and the wall time spent picking —
+    # always real host seconds (perf_counter, not the injected clock, which
+    # tests replace with synthetic time) so the exposed pick cost is the
+    # actual scheduling overhead
+    self.picks = 0
+    self.pick_seconds = 0.0
     self._expired: list[ProblemRequest] = []
     self._deadline_queued = 0          # deadline-tagged entries not yet popped
     self._last_deadline_s: Optional[float] = None  # last deadline-tagged add
@@ -160,6 +167,13 @@ class BucketScheduler:
     """
     if now is None:
       now = self._clock()
+    t0 = time.perf_counter()
+    try:
+      return self._next_batch(now)
+    finally:
+      self.pick_seconds += time.perf_counter() - t0
+
+  def _next_batch(self, now: float) -> Optional[tuple]:
     while True:
       key = self.policy.pick(self, now)
       if key is None:
@@ -187,6 +201,7 @@ class BucketScheduler:
         del self._buckets[key]
       if batch:
         self.policy.on_batch(key, batch, self)
+        self.picks += 1
         return key, batch
 
   def take_expired(self) -> list:

@@ -1,0 +1,598 @@
+"""Observability layer: flight-recorder ring, Chrome trace validity across
+every request outcome, Prometheus exposition grammar + golden rendering,
+thread safety under live serving, and the HTTP endpoint."""
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.apps import graphs
+from repro.serve_mmo import (DeadlineExceededError, MMOEngine, RejectedError,
+                             apsp_request, mmo_request)
+from repro.serve_mmo.exposition import (HISTOGRAM_BOUNDS_S, LogHistogram,
+                                        escape_label_value, render_prometheus)
+from repro.serve_mmo.httpd import PROMETHEUS_CONTENT_TYPE, ObservabilityServer
+from repro.serve_mmo.metrics import RollingWindow, ServeMetrics, bucket_label
+from repro.serve_mmo.observability import (MAX_ITERATION_SLICES,
+                                           FlightRecorder)
+from repro.serve_mmo.scheduler import BucketKey, request_bucket
+
+from conftest import FakeClock
+
+RNG = np.random.default_rng(0)
+
+
+def _mmo_req(n=12):
+  a = RNG.standard_normal((n, n)).astype(np.float32)
+  b = RNG.standard_normal((n, n)).astype(np.float32)
+  return mmo_request(a, b, op="minplus")
+
+
+def _apsp_req(n=12, seed=0):
+  return apsp_request(graphs.weighted_digraph(n, 0.3, seed=seed))
+
+
+def _async_request_events(events):
+  """The trace's nestable async request events, grouped (id, name) → phs."""
+  grouped = {}
+  for ev in events:
+    if ev.get("cat") == "request" and ev["ph"] in ("b", "e"):
+      grouped.setdefault((ev["id"], ev["name"]), []).append(ev)
+  return grouped
+
+
+def _assert_balanced(events):
+  """Every async request slice must open exactly once and close exactly
+  once, begin before end — the invariant Perfetto needs to nest them."""
+  for (rid, name), evs in _async_request_events(events).items():
+    phs = [ev["ph"] for ev in evs]
+    assert phs.count("b") == 1 and phs.count("e") == 1, \
+        f"request {rid} slice {name!r} unbalanced: {phs}"
+    b = next(ev for ev in evs if ev["ph"] == "b")
+    e = next(ev for ev in evs if ev["ph"] == "e")
+    assert b["ts"] <= e["ts"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_ring_bounds_memory_and_reports_drops():
+  rec = FlightRecorder(capacity=10, clock=FakeClock())
+  for i in range(25):
+    rec.instant(f"ev{i}")
+  st = rec.stats()
+  assert st["live"] == 10 and st["recorded"] == 25 and st["dropped"] == 15
+  # oldest events fell off the back, newest survived
+  assert [ev["name"] for ev in rec.events()] == \
+      [f"ev{i}" for i in range(15, 25)]
+  rec.clear()
+  assert rec.stats() == {"enabled": True, "capacity": 10, "recorded": 0,
+                         "live": 0, "dropped": 0}
+
+
+def test_disabled_recorder_records_nothing():
+  rec = FlightRecorder(capacity=16, clock=FakeClock(), enabled=False)
+  rec.request_begin(1, kind="mmo", op="mma", tenant="t")
+  rec.request_picked(1)
+  rec.request_end(1, "done", executing=True)
+  rec.request_rejected(2, "queue_full", kind="mmo", op="mma", tenant="t")
+  rec.batch_complete(label="b", scheduled_s=0.0, stacked_s=0.1,
+                     executed_s=0.2, device_s=0.3, completed_s=0.4,
+                     backend="xla", schedule="local", batch=1, padded=1,
+                     h2d_bytes=0, cache_hit=True, request_ids=[1],
+                     arrivals_s=[0.0])
+  rec.instant("nope")
+  assert rec.stats()["recorded"] == 0 and rec.events() == []
+
+
+def test_recorder_rejects_nonpositive_capacity():
+  with pytest.raises(ValueError):
+    FlightRecorder(capacity=0)
+
+
+def test_lifecycle_timestamps_come_from_injected_clock():
+  """Spans stamp the engine clock in microseconds — a synthetic clock gives
+  exact, deterministic traces."""
+  clock = FakeClock(1.0)
+  rec = FlightRecorder(clock=clock)
+  rec.request_begin(7, kind="closure", op="minplus", tenant="alpha")
+  clock.t = 1.5
+  rec.request_picked(7)
+  clock.t = 2.25
+  rec.request_end(7, "done", executing=True)
+  evs = rec.events()
+  assert [ev["ts"] for ev in evs] == [1.0e6, 1.5e6, 1.5e6, 2.25e6]
+  _assert_balanced(evs)
+  begin = evs[0]
+  assert begin["args"] == {"kind": "closure", "op": "minplus",
+                           "tenant": "alpha"}
+  assert evs[-1]["args"]["outcome"] == "done"
+
+
+def test_batch_complete_emits_phases_requests_and_iteration_slices():
+  rec = FlightRecorder(clock=FakeClock())
+  rec.request_begin(1, kind="closure", op="minplus", tenant="t", t_s=0.0)
+  rec.request_begin(2, kind="closure", op="minplus", tenant="t", t_s=0.1)
+  rec.batch_complete(label="closure/minplus/16/float32",
+                     scheduled_s=1.0, stacked_s=1.1, executed_s=1.3,
+                     device_s=1.7, completed_s=1.8, backend="xla",
+                     schedule="local", batch=2, padded=2, h2d_bytes=2048,
+                     cache_hit=True, request_ids=[1, 2],
+                     arrivals_s=[0.0, 0.1], iterations=[3, 5])
+  evs = rec.events()
+  _assert_balanced(evs)
+  phases = {ev["name"]: ev for ev in evs
+            if ev["ph"] == "X" and not ev["name"].startswith("squaring")}
+  assert set(phases) == {"pad_and_stack", "resolve_compile",
+                         "device_compute", "split_results"}
+  assert phases["pad_and_stack"]["ts"] == pytest.approx(1.0e6)
+  assert phases["pad_and_stack"]["dur"] == pytest.approx(0.1e6)
+  assert phases["resolve_compile"]["args"]["cache"] == "hit"
+  assert phases["device_compute"]["dur"] == pytest.approx(0.4e6)
+  assert phases["device_compute"]["args"]["iterations"] == [3, 5]
+  assert phases["split_results"]["dur"] == pytest.approx(0.1e6)
+  # apportioned squaring slices: max measured iterations, tiling exactly the
+  # device window, explicitly marked as apportioned
+  slices = [ev for ev in evs if ev["name"].startswith("squaring_iter")]
+  assert len(slices) == 5
+  assert all(ev["args"]["apportioned"] is True for ev in slices)
+  assert slices[0]["ts"] == pytest.approx(1.3e6)
+  assert sum(ev["dur"] for ev in slices) == pytest.approx(0.4e6)
+  # per-request completion args carry the measured latency
+  done = [ev for ev in evs if ev.get("cat") == "request"
+          and ev["ph"] == "e" and ev["name"] == "execute"]
+  assert {ev["id"]: ev["args"]["latency_ms"] for ev in done} == \
+      {1: pytest.approx(1800.0), 2: pytest.approx(1700.0)}
+
+
+def test_iteration_slices_are_capped():
+  """A 1024-node Bellman-Ford batch measures ~1023 relaxations; tracing one
+  slice per relaxation would evict half the ring per batch."""
+  rec = FlightRecorder(clock=FakeClock())
+  rec.batch_complete(label="b", scheduled_s=0.0, stacked_s=0.0,
+                     executed_s=0.0, device_s=1.0, completed_s=1.0,
+                     backend="xla", schedule="local", batch=1, padded=1,
+                     h2d_bytes=0, cache_hit=True, request_ids=[],
+                     arrivals_s=[], iterations=[1000])
+  slices = [ev for ev in rec.events()
+            if ev["name"].startswith("squaring_iter")]
+  assert len(slices) == MAX_ITERATION_SLICES
+
+
+def test_export_is_json_serializable_chrome_trace():
+  rec = FlightRecorder(clock=FakeClock())
+  rec.instant("hello", args={"k": 1})
+  doc = json.loads(json.dumps(rec.export()))
+  assert doc["displayTimeUnit"] == "ms"
+  assert doc["traceEvents"][0] == {
+      "ph": "M", "pid": 1, "name": "process_name",
+      "args": {"name": "serve_mmo engine"}}
+  assert doc["traceEvents"][1]["name"] == "hello"
+
+
+# ---------------------------------------------------------------------------
+# engine integration: one trace per request outcome
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_engine():
+  """One engine that served a small mixed workload (mmo + closure buckets),
+  shared by the trace/exposition assertions below."""
+  engine = MMOEngine(backend="xla", max_batch=4)
+  futs = [engine.submit(r) for r in
+          [_mmo_req(), _mmo_req(), _apsp_req(seed=1), _apsp_req(seed=2)]]
+  engine.run_until_idle()
+  for f in futs:
+    assert f.done()
+  return engine
+
+
+def test_live_trace_is_balanced_and_loads_as_json(served_engine):
+  doc = json.loads(json.dumps(served_engine.export_trace()))
+  evs = doc["traceEvents"]
+  _assert_balanced(evs)
+  for ev in evs:
+    if ev["ph"] == "X":
+      assert ev["dur"] >= 0.0
+  names = {ev["name"] for ev in evs}
+  assert {"pad_and_stack", "resolve_compile", "device_compute",
+          "split_results", "queued", "execute"} <= names
+  # the closure batches ran a measured fixpoint → apportioned slices and
+  # measured iteration counts on the device span
+  closure_devs = [ev for ev in evs if ev["name"] == "device_compute"
+                  and "iterations" in ev.get("args", {})]
+  assert closure_devs and all(
+      min(ev["args"]["iterations"]) >= 1 for ev in closure_devs)
+  assert any(ev["name"].startswith("squaring_iter") for ev in evs)
+  # every completed request closed its execute slice with outcome=done
+  done = [ev for ev in evs if ev.get("cat") == "request"
+          and ev["ph"] == "e" and ev["name"] == "execute"]
+  assert len(done) == 4
+  assert all(ev["args"]["outcome"] == "done" for ev in done)
+
+
+def test_trace_records_expired_requests():
+  clock = FakeClock()
+  engine = MMOEngine(backend="xla", clock=clock)
+  fut = engine.submit(_mmo_req())
+  doomed = _mmo_req()
+  doomed.deadline_s = 0.5
+  fut2 = engine.submit(doomed)
+  clock.t = 2.0  # past the deadline before any batch runs
+  engine.run_until_idle()
+  assert fut.done()
+  with pytest.raises(DeadlineExceededError):
+    fut2.result(timeout=5)
+  evs = engine.export_trace()["traceEvents"]
+  _assert_balanced(evs)
+  ends = {ev["id"]: ev["args"]["outcome"] for ev in evs
+          if ev.get("cat") == "request" and ev["ph"] == "e"
+          and "args" in ev}
+  assert "expired" in ends.values() and "done" in ends.values()
+  # the expired request never executed: its queued slice closed directly
+  expired_id = next(i for i, o in ends.items() if o == "expired")
+  assert (expired_id, "execute") not in _async_request_events(evs)
+
+
+def test_trace_records_failed_batches():
+  engine = MMOEngine(backend="xla")
+
+  def boom(*a, **kw):
+    raise RuntimeError("poisoned compile")
+
+  engine.cache.get_or_compile = boom
+  fut = engine.submit(_mmo_req())
+  engine.run_until_idle()
+  with pytest.raises(RuntimeError):
+    fut.result(timeout=5)
+  evs = engine.export_trace()["traceEvents"]
+  _assert_balanced(evs)
+  fails = [ev for ev in evs if ev.get("cat") == "request"
+           and ev["ph"] == "e" and ev["name"] == "execute"]
+  assert fails and fails[0]["args"] == {"outcome": "failed",
+                                        "error": "RuntimeError"}
+  assert any(ev["name"] == "batch_fail" for ev in evs)
+
+
+def test_trace_records_rejections_as_instants():
+  engine = MMOEngine(backend="xla", max_queue=1)
+  kept = engine.submit(_mmo_req())
+  with pytest.raises(RejectedError):
+    engine.submit(_mmo_req()).result(timeout=5)
+  engine.run_until_idle()
+  assert kept.done()
+  evs = engine.export_trace()["traceEvents"]
+  _assert_balanced(evs)
+  rejects = [ev for ev in evs if ev["name"] == "reject"]
+  assert len(rejects) == 1
+  assert rejects[0]["ph"] == "i"
+  assert rejects[0]["args"]["reason"] == "queue_full"
+
+
+def test_trace_off_engine_records_nothing(served_engine):
+  engine = MMOEngine(backend="xla", trace=False)
+  fut = engine.submit(_mmo_req())
+  engine.run_until_idle()
+  assert fut.done()
+  assert engine.tracer.stats()["recorded"] == 0
+  assert len(engine.export_trace()["traceEvents"]) == 1  # metadata only
+  # ...and the exposition still renders, advertising tracing as off
+  text = render_prometheus(engine.observability_state())
+  assert "serve_trace_enabled 0" in text
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: grammar, histograms, golden rendering
+# ---------------------------------------------------------------------------
+
+_METRIC_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^{}]*)\})?"
+    r" (?P<value>[^ ]+)$")
+_LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\["\\n])*"$')
+
+
+def _parse_exposition(text: str):
+  """Validate Prometheus text-format 0.0.4 line by line; returns
+  (families, samples) where families maps name → type and samples is a list
+  of (name, labels-dict, float-value)."""
+  assert text.endswith("\n")
+  families, helped, samples = {}, set(), []
+  for line in text.splitlines():
+    if line.startswith("# HELP "):
+      name = line.split(" ", 3)[2]
+      assert _METRIC_RE.match(name)
+      assert name not in helped, f"duplicate HELP for {name}"
+      helped.add(name)
+    elif line.startswith("# TYPE "):
+      _, _, name, mtype = line.split(" ", 3)
+      assert _METRIC_RE.match(name)
+      assert mtype in ("counter", "gauge", "histogram", "summary", "untyped")
+      assert name not in families, f"duplicate TYPE for {name}"
+      assert name in helped, f"TYPE for {name} precedes its HELP"
+      families[name] = mtype
+    else:
+      m = _SAMPLE_RE.match(line)
+      assert m, f"malformed sample line: {line!r}"
+      labels = {}
+      if m.group("labels"):
+        for pair in re.split(r",(?=[a-zA-Z_])", m.group("labels")):
+          assert _LABEL_RE.match(pair), f"malformed label: {pair!r}"
+          k, v = pair.split("=", 1)
+          labels[k] = v[1:-1]
+      value = m.group("value")
+      fval = {"+Inf": float("inf"), "-Inf": float("-inf")}.get(
+          value, None)
+      samples.append((m.group("name"), labels,
+                      fval if fval is not None else float(value)))
+  return families, samples
+
+
+def test_live_exposition_parses_and_histograms_are_cumulative(served_engine):
+  text = render_prometheus(served_engine.observability_state())
+  families, samples = _parse_exposition(text)
+  # every sample belongs to a declared family (histograms contribute
+  # _bucket/_sum/_count children of the declared base name)
+  for name, _, _ in samples:
+    base = re.sub(r"_(bucket|sum|count)$", "", name)
+    assert name in families or base in families, f"undeclared sample {name}"
+  assert families["serve_submitted_total"] == "counter"
+  assert families["serve_queue_depth"] == "gauge"
+  assert families["serve_service_seconds"] == "histogram"
+  by_name: dict = {}
+  for name, labels, value in samples:
+    by_name.setdefault(name, []).append((labels, value))
+  assert by_name["serve_submitted_total"] == [({}, 4)]
+  # per-(histogram, bucket-label) series: counts cumulative in le, and the
+  # +Inf bucket equals _count
+  hname = "serve_service_seconds"
+  series: dict = {}
+  for labels, value in by_name[f"{hname}_bucket"]:
+    series.setdefault(labels["bucket"], []).append((labels["le"], value))
+  counts = {labels["bucket"]: value
+            for labels, value in by_name[f"{hname}_count"]}
+  assert series and set(series) == set(counts)
+  for blabel, buckets in series.items():
+    values = [v for _, v in buckets]
+    assert values == sorted(values), f"non-cumulative histogram {blabel}"
+    assert dict(buckets)["+Inf"] == counts[blabel]
+    # fixed fleet-wide boundaries: every series emits the same le labels
+    assert len(buckets) == len(HISTOGRAM_BOUNDS_S) + 1
+
+
+def test_exposition_includes_estimator_drift(served_engine):
+  text = render_prometheus(served_engine.observability_state())
+  _, samples = _parse_exposition(text)
+  drift = [(labels, v) for name, labels, v in samples
+           if name == "serve_estimator_drift_ratio"]
+  assert drift, "served engine must report estimator drift cells"
+  for labels, v in drift:
+    assert {"bucket", "backend", "schedule"} <= set(labels)
+    assert v > 0.0
+
+
+def test_golden_exposition_rendering():
+  """Pin the full rendered text for one synthetic state: any grammar change
+  (family names, label sets, le spellings, ordering) shows up as a golden
+  diff, not as a silently reshaped scrape."""
+  q1 = [0] * 23
+  q1[8], q1[10] = 3, 1
+  s1 = [0] * 23
+  s1[12] = 4
+  q2 = [0] * 23
+  q2[5] = 2
+  state = {
+      "metrics": {
+          "uptime_s": 12.5,
+          "counters": {"submitted": 9, "completed": 6, "rejected": 1,
+                       "expired": 1, "failed": 1, "batches": 3,
+                       "h2d_bytes": 4096},
+          "rejected_by_reason": {"queue_full": 1},
+          "histogram_bounds_s": list(HISTOGRAM_BOUNDS_S),
+          "buckets": {
+              "closure/minplus/16/float32": {
+                  "completed": 4, "expired": 1, "failed": 0,
+                  "histograms": {"queue": (q1, 0.0421, 4),
+                                 "service": (s1, 0.0631, 4)}},
+              "mmo/mma/16x16x16/float32+float16": {
+                  "completed": 2, "expired": 0, "failed": 1,
+                  "histograms": {"queue": (q2, 0.0015, 2)}},
+          },
+      },
+      "queue_depth": 2,
+      "executing": 1,
+      "admission": {"queued": 2, "backlog_s": 0.25, "evaluations": 9,
+                    "inflight": {"alpha": 2, "beta": 1},
+                    "rejections": {"queue_full": 1},
+                    "limits": {"max_queue": 64, "tenant_quota": None,
+                               "max_backlog_s": None}},
+      "cache": {"executables": 5, "hits": 12, "misses": 5,
+                "compile_s": 1.5},
+      "scheduler": {"picks": 3, "pick_seconds": 0.004},
+      "estimator_cells": [
+          {"bucket": "closure/minplus/16/float32", "backend": "xla",
+           "schedule": "local", "seconds": 0.002, "observations": 4,
+           "drift": 1.25}],
+      "trace": {"enabled": True, "capacity": 65536, "recorded": 120,
+                "live": 120, "dropped": 0},
+  }
+  text = render_prometheus(state)
+  _parse_exposition(text)  # golden must itself be grammatical
+  golden_path = os.path.join(os.path.dirname(__file__), "data",
+                             "golden_metrics.prom")
+  with open(golden_path, encoding="utf-8") as f:
+    assert text == f.read()
+
+
+def test_log_histogram_drops_bogus_values():
+  h = LogHistogram()
+  for bad in (float("nan"), float("inf"), -1.0):
+    h.add(bad)
+  assert h.count == 0
+  h.add(0.0)
+  h.add(1e-5)   # at the first boundary → first bucket (le is inclusive)
+  h.add(100.0)  # beyond the top bound → overflow slot
+  counts, total, n = h.state()
+  assert n == 3 and counts[0] == 2 and counts[-1] == 1
+  assert total == pytest.approx(100.00001)
+
+
+def test_escape_label_value():
+  assert escape_label_value('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+
+
+# ---------------------------------------------------------------------------
+# metrics satellites: strict-JSON empty windows, mixed-dtype bucket labels
+# ---------------------------------------------------------------------------
+
+
+def test_empty_window_percentiles_are_null_not_nan():
+  """A bucket created by on_expire alone has empty latency windows; its
+  snapshot must be strict JSON (None → null), never bareword NaN."""
+  assert RollingWindow().percentile(50) is None
+  metrics = ServeMetrics()
+  metrics.on_expire(request_bucket(_mmo_req()))
+  snap = metrics.snapshot(queue_depth=0, executing=0)
+  text = json.dumps(snap, allow_nan=False)  # raises on NaN/Inf
+  (bucket,) = snap["buckets"].values()
+  assert bucket["queue_ms"] == {"p50": None, "p99": None}
+  assert json.loads(text)["counters"]["expired"] == 1
+
+
+def test_bucket_label_spells_out_mixed_dtypes():
+  uniform = BucketKey(kind="mmo", op="mma", shape=(16, 16, 16),
+                      dtypes=("float32", "float32"), params=())
+  mixed_a = BucketKey(kind="mmo", op="mma", shape=(16, 16, 16),
+                      dtypes=("float32", "float16"), params=())
+  mixed_b = BucketKey(kind="mmo", op="mma", shape=(16, 16, 16),
+                      dtypes=("float32", "bfloat16"), params=())
+  # historical single-dtype spelling for the uniform majority
+  assert bucket_label(uniform) == "mmo/mma/16x16x16/float32"
+  # two buckets differing only in a non-leading operand dtype cannot share
+  # a label
+  assert bucket_label(mixed_a) == "mmo/mma/16x16x16/float32+float16"
+  assert bucket_label(mixed_a) != bucket_label(mixed_b)
+
+
+# ---------------------------------------------------------------------------
+# thread safety: snapshots + renders + trace exports against a live engine
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_observability_reads_during_serving():
+  """Hammer every observability read path from 8 threads while the engine
+  serves on its background loop: no exceptions, every read parseable, all
+  traffic completes."""
+  engine = MMOEngine(backend="xla", max_batch=4)
+  reqs = [_mmo_req() for _ in range(12)] + \
+         [_apsp_req(seed=s) for s in range(4)]
+  engine.prewarm(reqs)
+  engine.start()
+  errs = []
+  futures = []
+  barrier = threading.Barrier(8)
+
+  def submitter(i):
+    try:
+      barrier.wait()
+      for r in reqs[i::4]:
+        futures.append(engine.submit(r))
+    except Exception as e:  # noqa: BLE001
+      errs.append(e)
+
+  def reader(i):
+    try:
+      barrier.wait()
+      for _ in range(25):
+        json.dumps(engine.metrics_snapshot(), default=float,
+                   allow_nan=False)
+        _parse_exposition(render_prometheus(engine.observability_state()))
+        json.dumps(engine.export_trace())
+    except Exception as e:  # noqa: BLE001
+      errs.append(e)
+
+  threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)]
+  threads += [threading.Thread(target=reader, args=(i,)) for i in range(4)]
+  for t in threads:
+    t.start()
+  for t in threads:
+    t.join()
+  engine.stop()
+  assert not errs
+  assert len(futures) == len(reqs) and all(f.done() for f in futures)
+  _assert_balanced(engine.export_trace()["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint
+# ---------------------------------------------------------------------------
+
+
+def test_http_endpoint_serves_all_routes(served_engine):
+  with ObservabilityServer(served_engine, port=0) as srv:
+    assert srv.port != 0
+
+    def get(path):
+      with urllib.request.urlopen(f"{srv.url}{path}", timeout=10) as resp:
+        return resp.status, resp.headers.get("Content-Type"), \
+            resp.read().decode("utf-8")
+
+    status, ctype, body = get("/metrics")
+    assert status == 200 and ctype == PROMETHEUS_CONTENT_TYPE
+    families, _ = _parse_exposition(body)
+    assert "serve_completed_total" in families
+
+    status, ctype, body = get("/healthz")
+    assert status == 200 and ctype == "application/json"
+    health = json.loads(body)
+    assert health["status"] == "ok" and health["pending"] == 0
+
+    status, _, body = get("/snapshot")
+    assert status == 200
+    assert json.loads(body)["counters"]["completed"] == 4
+
+    status, _, body = get("/trace")
+    assert status == 200
+    _assert_balanced(json.loads(body)["traceEvents"])
+
+    with pytest.raises(urllib.error.HTTPError) as err:
+      get("/nope")
+    assert err.value.code == 404
+
+
+# ---------------------------------------------------------------------------
+# launch driver: the metrics ticker must never write to stdout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_launch_metrics_ticker_goes_to_stderr(tmp_path):
+  env = dict(os.environ, PYTHONPATH="src")
+  proc = subprocess.run(
+      [sys.executable, "-m", "repro.launch.serve_mmo", "--rate", "30",
+       "--duration", "1.5", "--sizes", "12", "--max-batch", "4",
+       "--metrics-every", "0.3", "--trace-out",
+       str(tmp_path / "trace.json")],
+      capture_output=True, text=True, timeout=600, env=env,
+      cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+  assert proc.returncode == 0, proc.stderr
+  assert "[serve_mmo][metrics]" not in proc.stdout
+  ticks = [l for l in proc.stderr.splitlines()
+           if l.startswith("[serve_mmo][metrics] ")]
+  assert ticks, "ticker produced no stderr snapshots"
+  for line in ticks:
+    snap = json.loads(line.split(" ", 1)[1])
+    assert "counters" in snap and "queue_depth" in snap
+  trace = json.loads((tmp_path / "trace.json").read_text())
+  _assert_balanced(trace["traceEvents"])

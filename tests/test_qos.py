@@ -519,7 +519,7 @@ def test_deadline_p99_at_least_2x_better_than_fifo_under_bulk():
 
 def test_rolling_window_percentiles_and_eviction():
   w = RollingWindow(size=4)
-  assert np.isnan(w.percentile(50))
+  assert w.percentile(50) is None  # empty window: None, never NaN
   for v in (1.0, 2.0, 3.0, 4.0, 100.0):  # 1.0 evicted by 100.0
     w.add(v)
   assert w.count == 5
