@@ -1,0 +1,258 @@
+"""Resilience benchmark: goodput under injected faults + disabled-hook cost.
+
+    PYTHONPATH=src python benchmarks/resilience_bench.py [--smoke]
+
+Two experiments, recorded in BENCH_resilience.json:
+
+**Goodput under transient execute faults.**  The same deadline-tagged APSP
+stream (25% urgent at priority 1) is served twice against a seeded
+transient execute fault schedule — one guaranteed blip
+(``execute:transient:1``, so the comparison never degenerates to
+fault-free) plus rate-mode chaos (``execute:rate:R`` — each batch dispatch
+fails with probability R, replayable under the seed):
+
+  baseline — fail-whole-batch: ``transient_retries=0, bisect=False``, the
+             pre-recovery behavior.  Every fault costs the whole batch: all
+             co-batched requests fail, goodput drops by batch-sized bites.
+  recovery — the engine's recovery driver (bounded retries + bisection).
+             A transient fault is ridden out by a retry; goodput stays 1.0
+             and the cost is a few extra launches, not failed requests.
+
+Reported per arm: goodput (completed / offered), overall and urgent-slice
+p99 latency, retries, and batch failures by kind.  Both arms run with
+breakers disabled (``breaker_threshold=None``): the injected fault is
+backend-agnostic, so arm re-dispatch could not help and would only blur the
+comparison.
+
+**Disabled-hook steady-state overhead.**  The fault-tolerance machinery is
+designed to be left on in production, so its *disabled/steady* cost must
+be negligible.  In the no-fault steady state the recovery path adds
+exactly three things to a batch: the ``faults is not None`` hook checks,
+the breaker fast path (``pick`` + ``on_success`` against an empty breaker
+registry), and NaN result validation (one NaN-propagating ``min``
+reduction over the live output).  Those calls cost single-digit
+microseconds against a millisecond-scale batch — an effect an end-to-end
+A/B wall cannot resolve on a contended CI box (paired 0.3s walls here
+swing ±10% run to run, and even an A/A test of two identical engines
+reads ±6%).  So the bench prices the overhead *directly*: it times the
+exact added calls against the stream's real bucket output, times the real
+per-batch serve cycle on a warm default engine, and reports the ratio.
+Asserted < 2%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+from repro.apps import graphs
+from repro.serve_mmo import MMOEngine, apsp_request, parse_fault_spec
+
+OVERHEAD_BUDGET = 0.02  # max disabled-hook steady-state slowdown
+URGENT_FRAC = 0.25
+
+
+def make_stream(n_requests: int, seed: int = 0):
+  """Same-bucket APSP stream (deterministic batching), 25% urgent."""
+  rng = np.random.default_rng(seed)
+  reqs = []
+  for i in range(n_requests):
+    urgent = rng.random() < URGENT_FRAC
+    qos = {"priority": 1, "deadline_s": 60.0} if urgent else {}
+    reqs.append(apsp_request(
+        graphs.weighted_digraph(12, 0.3, seed=int(rng.integers(0, 2 ** 31))),
+        **qos))
+  return reqs
+
+
+def _p99_ms(lat):
+  return float(np.percentile(np.asarray(lat, np.float64), 99)) * 1e3 \
+      if lat else None
+
+
+def run_arm(label: str, *, n_requests: int, stream_seed: int,
+            fault_rate: float, fault_seed: int, retries: int, bisect: bool,
+            backend: str, max_batch: int) -> dict:
+  """Serve one fresh copy of the stream under one recovery configuration."""
+  injector = (parse_fault_spec(
+      f"execute:transient:1;execute:rate:{fault_rate}", seed=fault_seed)
+      if fault_rate > 0.0 else None)
+  eng = MMOEngine(backend=backend, max_batch=max_batch, policy="deadline",
+                  faults=injector, transient_retries=retries, bisect=bisect,
+                  breaker_threshold=None, retry_backoff_s=0.0005)
+  reqs = make_stream(n_requests, seed=stream_seed)
+  eng.prewarm(reqs[:1])   # compiles every pow2 batch variant of the bucket,
+                          # so bisection launches never pay a compile
+  t0 = time.perf_counter()
+  futs = [eng.submit(r) for r in reqs]
+  eng.run_until_idle()
+  wall = time.perf_counter() - t0
+
+  urgent_rids = {f.request.request_id for f in futs
+                 if f.request.priority == 1}
+  lat, urgent_lat = [], []
+  for rec in eng._records:
+    lat.append(rec.completed_s - t0)
+    if rec.request_id in urgent_rids:
+      urgent_lat.append(rec.completed_s - t0)
+  snap = eng.metrics_snapshot()
+  done = sum(1 for f in futs if f.state == "done")
+  out = {
+      "label": label,
+      "offered": len(futs),
+      "completed": done,
+      "goodput": done / len(futs),
+      "wall_s": wall,
+      "p99_ms": _p99_ms(lat),
+      "urgent_p99_ms": _p99_ms(urgent_lat),
+      "retries": snap["counters"]["retries"],
+      "batch_failures": snap["batch_failures_by_kind"],
+      "faults_fired": injector.stats()["fired_total"] if injector else 0,
+  }
+  print(f"[resilience_bench] {label:9s}: goodput={out['goodput']:.3f} "
+        f"({done}/{len(futs)})  p99={out['p99_ms']:.1f}ms  "
+        f"urgent_p99={out['urgent_p99_ms']:.1f}ms  "
+        f"retries={out['retries']}  faults={out['faults_fired']}  "
+        f"failures={out['batch_failures']}")
+  return out
+
+
+def run_disabled_overhead(*, n_requests: int, stream_seed: int, backend: str,
+                          max_batch: int, repeats: int) -> dict:
+  """Price the steady-state hook calls directly against the real per-batch
+  serve cycle (see module docstring for why not an end-to-end A/B wall)."""
+  from repro.serve_mmo import batching
+  from repro.serve_mmo.resilience import ResilienceManager
+  from repro.serve_mmo.scheduler import request_bucket
+
+  rng = np.random.default_rng(stream_seed)
+  ws = [graphs.weighted_digraph(12, 0.3, seed=int(rng.integers(0, 2 ** 31)))
+        for _ in range(n_requests)]
+
+  # per-batch serve cycle on a warm default engine (hooks armed) — min over
+  # several replays so contention bursts don't inflate the denominator
+  eng = MMOEngine(backend=backend, max_batch=max_batch)
+  eng.prewarm([apsp_request(ws[0])])
+  for w in ws:
+    eng.submit(apsp_request(w))
+  eng.run_until_idle()    # warmup replay outside the measurement
+  batch_walls = []
+  for _ in range(repeats):
+    eng.reset_stats()
+    t0 = time.perf_counter()
+    for w in ws:
+      eng.submit(apsp_request(w))
+    eng.run_until_idle()
+    batches = eng.stats().batches
+    batch_walls.append((time.perf_counter() - t0) / max(batches, 1))
+  batch_s = min(batch_walls)
+
+  # the exact calls the recovery path adds to a no-fault batch, against the
+  # stream's real bucket output shape
+  key = request_bucket(apsp_request(ws[0]))
+  (nb,) = key.shape
+  out = (np.random.default_rng(0).random(
+      (max_batch, nb, nb)).astype(np.float32),
+         np.full(max_batch, 3, np.int32))
+  mgr = ResilienceManager(threshold=5)
+  arm = (backend, (), "local")
+  hook_walls = []
+  loops = 5000
+  for _ in range(3):
+    t0 = time.perf_counter()
+    for _ in range(loops):
+      batching.validate_finite(key, out, max_batch)
+      mgr.pick(key, arm, lambda: ())
+      mgr.on_success(key, arm)
+    hook_walls.append((time.perf_counter() - t0) / loops)
+  hook_s = min(hook_walls)
+
+  return {
+      "batch_cycle_s": batch_s,
+      "hook_s": hook_s,
+      "overhead_frac": hook_s / batch_s,
+      "budget_frac": OVERHEAD_BUDGET,
+      "pairs": repeats,
+  }
+
+
+def main(argv=None):
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--requests", type=int, default=192)
+  ap.add_argument("--backend", default="xla")
+  ap.add_argument("--max-batch", type=int, default=8)
+  ap.add_argument("--fault-rate", type=float, default=0.01,
+                  help="per-dispatch transient execute fault probability")
+  ap.add_argument("--seed", type=int, default=0)
+  ap.add_argument("--fault-seed", type=int, default=2,
+                  help="injector seed (default chosen so the default "
+                       "config actually draws >= 1 fault)")
+  ap.add_argument("--repeats", type=int, default=15,
+                  help="replays for the per-batch serve-cycle timing")
+  ap.add_argument("--retries", type=int, default=2,
+                  help="recovery arm's transient retry budget")
+  ap.add_argument("--smoke", action="store_true",
+                  help="CI sizing: fewer requests/pairs, higher fault rate "
+                       "so the fault path is exercised deterministically")
+  ap.add_argument("--out", default="BENCH_resilience.json", metavar="PATH",
+                  help="write all arms' numbers to PATH as JSON "
+                       "('' disables)")
+  args = ap.parse_args(argv)
+  if args.smoke:
+    args.requests = min(args.requests, 96)
+    args.fault_rate = max(args.fault_rate, 0.05)
+    args.repeats = min(args.repeats, 7)
+
+  common = dict(n_requests=args.requests, stream_seed=args.seed,
+                fault_rate=args.fault_rate, fault_seed=args.fault_seed,
+                backend=args.backend, max_batch=args.max_batch)
+  baseline = run_arm("baseline", retries=0, bisect=False, **common)
+  recovery = run_arm("recovery", retries=args.retries, bisect=True, **common)
+
+  obs = run_disabled_overhead(
+      n_requests=args.requests, stream_seed=args.seed,
+      backend=args.backend, max_batch=args.max_batch, repeats=args.repeats)
+  print(f"[resilience_bench] disabled hooks: {obs['hook_s'] * 1e6:.1f}us "
+        f"per batch vs {obs['batch_cycle_s'] * 1e6:.0f}us batch cycle → "
+        f"{obs['overhead_frac'] * 100:+.2f}% "
+        f"(budget {OVERHEAD_BUDGET * 100:.0f}%)")
+
+  if args.out:
+    doc = {
+        "requests": args.requests,
+        "backend": args.backend,
+        "max_batch": args.max_batch,
+        "fault_rate": args.fault_rate,
+        "fault_seed": args.fault_seed,
+        "baseline": baseline,
+        "recovery": recovery,
+        "disabled_hook_overhead": obs,
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+      json.dump(doc, f, indent=2)
+    print(f"[resilience_bench] wrote {args.out}")
+
+  assert recovery["goodput"] == 1.0, (
+      f"recovery arm dropped requests under transient faults: "
+      f"{recovery['goodput']:.3f} goodput — isolation failed")
+  if baseline["faults_fired"]:
+    assert baseline["goodput"] < 1.0, (
+        "baseline arm absorbed a fault without retries — injector inert?")
+    assert recovery["goodput"] > baseline["goodput"], (
+        f"recovery ({recovery['goodput']:.3f}) must beat fail-whole-batch "
+        f"({baseline['goodput']:.3f}) under the same fault schedule")
+  if recovery["faults_fired"]:
+    assert recovery["retries"] > 0, "faults fired but nothing retried"
+  assert obs["overhead_frac"] < OVERHEAD_BUDGET, (
+      f"disabled fault-tolerance hooks cost "
+      f"{obs['overhead_frac'] * 100:.2f}% steady-state — exceeds the "
+      f"{OVERHEAD_BUDGET * 100:.0f}% budget; the machinery must be free "
+      f"when idle")
+  return 0
+
+
+if __name__ == "__main__":
+  raise SystemExit(main())

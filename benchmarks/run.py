@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
              bounding, scheduler pick cost → BENCH_qos.json)
   §Serving   serve_bench (bucketed engine vs naive loop, zero-recompile
              steady state, observability overhead < 5% → BENCH_serve.json)
+  §Faults    resilience_bench (goodput + urgent p99 under injected execute
+             faults vs fail-whole-batch, disabled-hook overhead < 2% →
+             BENCH_resilience.json)
 """
 from __future__ import annotations
 
@@ -22,8 +25,8 @@ import traceback
 def main() -> None:
   from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
                           microbench_shapes, microbench_square, qos_bench,
-                          roofline_table, serve_bench, shard_bench,
-                          sparse_bench)
+                          resilience_bench, roofline_table, serve_bench,
+                          shard_bench, sparse_bench)
   print("name,us_per_call,derived")
   suites = (
       ("fig9", microbench_square.main),
@@ -37,6 +40,7 @@ def main() -> None:
       ("shard", shard_bench.main),
       ("qos", qos_bench.main),
       ("serve", serve_bench.main),
+      ("resilience", resilience_bench.main),
   )
   failed = []
   for name, fn in suites:

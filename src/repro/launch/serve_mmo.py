@@ -25,6 +25,14 @@
         --rate 40 --duration 10 --trace-out /tmp/serve_trace.json
     # (curl localhost:9178/metrics from another terminal)
 
+    # chaos: 5% of execute dispatches fail transiently; bisection + retries
+    # keep every request completing (resilience line reports the recovery)
+    PYTHONPATH=src python -m repro.launch.serve_mmo --rate 40 --duration 3 \
+        --inject-faults "execute:rate:0.05" --transient-retries 2
+    # break one arm persistently: its breaker opens and traffic re-dispatches
+    PYTHONPATH=src python -m repro.launch.serve_mmo --backend xla \
+        --inject-faults "execute:persistent:backend=xla" --watchdog-s 5
+
 Generates a Poisson arrival stream of mixed SIMD² problems (APSP, KNN,
 reachability, raw mmo at several sizes), submits each request at its arrival
 time against the engine's background serving loop, and reports throughput
@@ -177,6 +185,31 @@ def main(argv=None):
   ap.add_argument("--trace-out", default=None, metavar="PATH",
                   help="write the flight recorder's Chrome trace JSON to "
                        "PATH at the end of the run")
+  ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                  help="chaos harness: ';'-separated fault rules, each "
+                       "point:mode[:arg][:k=v...][@match] — e.g. "
+                       "'execute:rate:0.02' (2%% of execute checks fail), "
+                       "'execute:persistent:backend=xla', "
+                       "'slow:transient:1:delay=0.2' (see serve_mmo/faults.py)")
+  ap.add_argument("--fault-seed", type=int, default=0,
+                  help="seed for rate-mode fault rules (replayable chaos)")
+  ap.add_argument("--transient-retries", type=int, default=1,
+                  help="whole-sub-batch retries before bisection (default 1)")
+  ap.add_argument("--retry-backoff-s", type=float, default=0.002,
+                  help="base backoff before a retry, doubled per attempt")
+  ap.add_argument("--no-bisect", action="store_true",
+                  help="fail a whole batch once retries are spent instead of "
+                       "bisecting to isolate the poisoned request")
+  ap.add_argument("--breaker-threshold", type=int, default=5, metavar="N",
+                  help="consecutive arm failures that open a circuit "
+                       "breaker; 0 disables breakers (fail in place)")
+  ap.add_argument("--breaker-probe-s", type=float, default=0.25,
+                  help="cooldown before an open breaker half-opens for a "
+                       "probe batch")
+  ap.add_argument("--watchdog-s", type=float, default=None, metavar="SECS",
+                  help="per-batch device watchdog: a batch that does not "
+                       "return within SECS fails with a timeout instead of "
+                       "wedging the serving loop (default: off)")
   args = ap.parse_args(argv)
 
   try:
@@ -235,6 +268,16 @@ def main(argv=None):
         cost_table.save(args.cost_table)
         print(f"[serve_mmo] persisted cost table to {args.cost_table}")
 
+  injector = None
+  if args.inject_faults:
+    from repro.serve_mmo import parse_fault_spec
+    try:
+      injector = parse_fault_spec(args.inject_faults, seed=args.fault_seed)
+    except ValueError as e:
+      ap.error(f"--inject-faults: {e}")
+    print(f"[serve_mmo] fault injection armed: {args.inject_faults!r} "
+          f"(seed={args.fault_seed})")
+
   engine = MMOEngine(backend=args.backend, max_batch=args.max_batch,
                      min_bucket=args.min_bucket, cost_table=cost_table,
                      mesh=mesh, schedule=args.schedule if mesh else "auto",
@@ -244,7 +287,16 @@ def main(argv=None):
                      max_backlog_s=args.max_backlog_s,
                      adaptive=args.adaptive,
                      max_batch_seconds=args.max_batch_seconds,
-                     trace=not args.no_trace)
+                     trace=not args.no_trace,
+                     faults=injector,
+                     transient_retries=args.transient_retries,
+                     retry_backoff_s=args.retry_backoff_s,
+                     bisect=not args.no_bisect,
+                     breaker_threshold=(args.breaker_threshold
+                                        if args.breaker_threshold > 0
+                                        else None),
+                     breaker_probe_s=args.breaker_probe_s,
+                     watchdog_s=args.watchdog_s)
 
   http_server = None
   if args.http_port is not None:
@@ -336,6 +388,19 @@ def main(argv=None):
   if st.rejected:
     print(f"[serve_mmo] admission rejections: "
           f"{dict(engine.admission.rejections)}")
+  msnap = engine.metrics_snapshot()
+  retries = msnap["counters"]["retries"]
+  failures_by_kind = msnap["batch_failures_by_kind"]
+  breakers = engine.resilience.snapshot()
+  if injector is not None or retries or failures_by_kind or breakers:
+    opens = sum(c["opens"] for c in breakers)
+    open_now = [f"{c['bucket']}/{c['backend']}/{c['schedule']}"
+                for c in breakers if c["state"] != "closed"]
+    print(f"[serve_mmo] resilience: retries={retries} "
+          f"batch_failures={failures_by_kind} breaker_opens={opens} "
+          f"open_now={open_now}")
+    if injector is not None:
+      print(f"[serve_mmo] injector: {injector.stats()}")
   if args.adaptive:
     est = engine.estimator.snapshot()
     warm = {label: f"{c['seconds'] * 1e3:.2f}ms/{c['observations']}obs"

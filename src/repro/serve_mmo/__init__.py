@@ -29,7 +29,14 @@ them serving workloads, not one-shot library calls.  This package turns the
   cache.py      — AOT executable cache keyed by (bucket, batch, backend) so
                   steady-state traffic never retraces,
   engine.py     — the engine: submit()/futures, synchronous step() or a
-                  background serving loop, per-request latency stats,
+                  background serving loop, per-request latency stats, and
+                  the batch-recovery driver (bounded retries, bisection,
+                  watchdog, result validation),
+  faults.py     — deterministic, seedable fault injection (compile /
+                  execute / nonfinite / slow points; persistent, transient
+                  and seeded-rate schedules) threaded through engine hooks,
+  resilience.py — per-(bucket, backend, schedule) circuit breakers with
+                  cost-ranked fallback arms and half-open probe recovery,
   observability.py — request-lifecycle tracer: a bounded ring-buffer flight
                   recorder of per-request/per-batch spans, exportable as
                   Chrome trace-event JSON (Perfetto / about://tracing),
@@ -60,12 +67,16 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.engine import EngineStats, MMOEngine
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
+from repro.serve_mmo.faults import (BatchTimeoutError, FaultInjector,
+                                    FaultRule, InjectedFault,
+                                    NonFiniteResultError, parse_fault_spec)
 from repro.serve_mmo.exposition import LogHistogram, render_prometheus
 from repro.serve_mmo.httpd import ObservabilityServer
 from repro.serve_mmo.metrics import RollingWindow, ServeMetrics, bucket_label
 from repro.serve_mmo.observability import FlightRecorder
 from repro.serve_mmo.policy import (DeadlinePolicy, FairSharePolicy,
                                     FifoPolicy, SchedulingPolicy, make_policy)
+from repro.serve_mmo.resilience import CircuitBreaker, ResilienceManager
 from repro.serve_mmo.scheduler import (BucketKey, BucketScheduler,
                                        FifoBucketScheduler)
 
@@ -94,6 +105,14 @@ __all__ = [
     "ObservabilityServer",
     "LogHistogram",
     "render_prometheus",
+    "FaultInjector",
+    "FaultRule",
+    "parse_fault_spec",
+    "InjectedFault",
+    "NonFiniteResultError",
+    "BatchTimeoutError",
+    "ResilienceManager",
+    "CircuitBreaker",
     "RejectedError",
     "DeadlineExceededError",
     "mmo_request",

@@ -222,6 +222,47 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
   raise ValueError(f"unknown kind {key.kind!r}")
 
 
+def _primary_output(key: BucketKey, out):
+  """The batch output array callers consume as the result value (mmo: the
+  contraction itself; closure: the closed matrix; knn: the distances)."""
+  return out[0] if isinstance(out, (tuple, list)) else out
+
+
+def validate_finite(key: BucketKey, out, live: int):
+  """NaN scan over the primary output's first ``live`` slots; returns the
+  offending request-slot indices (empty = clean).
+
+  Only NaN counts as garbage.  ±inf is a *legitimate* value in tropical
+  semirings — APSP spells "unreachable" as +inf — so this is ``isnan``,
+  never ``isfinite``.  Boolean/integer outputs cannot carry NaN and always
+  validate clean."""
+  arr = np.asarray(_primary_output(key, out))
+  if not np.issubdtype(arr.dtype, np.floating) or live < 1:
+    return []
+  # fast path first: one NaN-propagating reduction (min carries NaN through)
+  # decides clean batches — this runs on EVERY batch, so it must cost one
+  # pass and no temporaries; per-slot attribution only runs on the rare hit
+  if not np.isnan(np.min(arr[:live])):
+    return []
+  bad = np.isnan(arr[:live]).any(axis=tuple(range(1, arr.ndim)))
+  return [int(i) for i in np.nonzero(bad)[0]]
+
+
+def poison_output(key: BucketKey, out, slots: Sequence[int]):
+  """Overwrite the primary output's ``slots`` with NaN — the fault
+  injector's ``nonfinite`` point (faults.py): the engine's result
+  validation must catch exactly this.  Returns a rebuilt output structure;
+  non-float primaries (boolean semirings) pass through unpoisoned."""
+  primary = np.asarray(_primary_output(key, out))
+  if not np.issubdtype(primary.dtype, np.floating) or not len(slots):
+    return out
+  primary = primary.copy()
+  primary[list(slots)] = np.nan
+  if isinstance(out, (tuple, list)):
+    return (primary,) + tuple(out[1:])
+  return primary
+
+
 def split_results(key: BucketKey, reqs: Sequence[ProblemRequest], out):
   """Batched program output → per-request MMOResults at true shapes."""
   results = []

@@ -37,9 +37,13 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture,
                                  ProblemRequest, RejectedError)
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
+from repro.serve_mmo.faults import (ARM_FAILURE_KINDS, BatchTimeoutError,
+                                    InjectedFault, NonFiniteResultError,
+                                    classify_failure)
 from repro.serve_mmo.metrics import ServeMetrics, bucket_label
 from repro.serve_mmo.observability import (DEFAULT_TRACE_CAPACITY,
                                            FlightRecorder)
+from repro.serve_mmo.resilience import ResilienceManager
 from repro.serve_mmo.scheduler import (BucketScheduler, MIN_BUCKET,
                                        bucket_dim, contract_shape,
                                        request_bucket)
@@ -150,6 +154,25 @@ class MMOEngine:
   renderer (serve_mmo/exposition.py) and the HTTP endpoint
   (serve_mmo/httpd.py) serve.  Tracing is on by default; its steady-state
   overhead is asserted < 5% in benchmarks/serve_bench.py.
+
+  Fault tolerance (DESIGN.md §Fault tolerance): a failed batch no longer
+  fails every co-batched future.  The recovery driver retries the failed
+  sub-batch under ``transient_retries`` with exponential backoff
+  (``retry_backoff_s``), then bisects it (``bisect=True``) so a single
+  poisoned request costs O(log B) extra launches and fails alone while
+  its siblings complete.  Per-(bucket, backend, schedule) circuit breakers
+  (``breaker_threshold`` consecutive failures open one; ``None`` disables;
+  serve_mmo/resilience.py) re-dispatch a persistently-failing arm's
+  traffic to cost-ranked sibling arms — ultimately the reference dense
+  backend — behind their own executable-cache keys, with a half-open
+  probe batch after ``breaker_probe_s`` to recover.  Batch outputs are
+  validated for NaNs before futures fulfill (``validate_results``;
+  ±inf is legitimate tropical output), ``watchdog_s`` bounds a hung
+  device computation (the batch fails instead of wedging the loop), and
+  ``faults`` accepts a deterministic ``FaultInjector``
+  (serve_mmo/faults.py) that exercises every one of these paths on the
+  real code path.  Every retry/bisection/breaker transition lands in the
+  flight recorder and the Prometheus surfaces.
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
@@ -167,7 +190,15 @@ class MMOEngine:
                deadline_lookback_s: Optional[float] = None,
                trace: bool = True,
                trace_capacity: int = DEFAULT_TRACE_CAPACITY,
-               tracer: Optional[FlightRecorder] = None):
+               tracer: Optional[FlightRecorder] = None,
+               faults=None, transient_retries: int = 1,
+               retry_backoff_s: float = 0.002, bisect: bool = True,
+               breaker_threshold: Optional[int] = 5,
+               breaker_probe_s: float = 0.25,
+               watchdog_s: Optional[float] = None,
+               validate_results: bool = True,
+               fallback_backends=None,
+               resilience: Optional[ResilienceManager] = None):
     from repro.core import distributed as dist
     valid_schedules = ("auto", "local") + dist.SCHEDULES
     if schedule not in valid_schedules:
@@ -203,6 +234,24 @@ class MMOEngine:
     self.tracer = tracer if tracer is not None else FlightRecorder(
         capacity=trace_capacity, clock=self._clock, enabled=trace)
     self.cache = ExecutableCache()
+    # -- fault tolerance (DESIGN.md §Fault tolerance) -----------------------
+    if transient_retries < 0:
+      raise ValueError(f"transient_retries must be >= 0, "
+                       f"got {transient_retries}")
+    self.faults = faults
+    self.transient_retries = int(transient_retries)
+    self.retry_backoff_s = float(retry_backoff_s)
+    self.bisect = bool(bisect)
+    self.watchdog_s = None if watchdog_s is None else float(watchdog_s)
+    self.validate_results = bool(validate_results)
+    self.fallback_backends = (None if fallback_backends is None
+                              else tuple(fallback_backends))
+    if resilience is None:
+      resilience = ResilienceManager(threshold=breaker_threshold,
+                                     probe_after_s=breaker_probe_s,
+                                     clock=self._clock)
+    self.resilience = resilience
+    self._fallback_arms_memo: dict = {}  # BucketKey → tuple of arms
     self._lock = threading.RLock()
     self._work = threading.Condition(self._lock)
     self._idle = threading.Condition(self._lock)  # signaled: _pending empty
@@ -456,15 +505,142 @@ class MMOEngine:
         self.admission.on_dequeue(r)
       self._inflight.update(r.request_id for r in reqs)
     scheduled_s = self._clock()
+    try:
+      return self._serve_batch(key, reqs, scheduled_s)
+    except Exception as e:  # noqa: BLE001 — recovery-driver bug safety net:
+      # whatever went wrong inside the driver itself, never leak in-flight
+      # requests (a wedged future blocks result() forever)
+      with self._lock:
+        leaked = [r for r in reqs if r.request_id in self._inflight]
+      self._fail_requests(key, leaked, e)
+      self.tracer.instant("batch_fail", cat="batch",
+                          args={"bucket": bucket_label(key),
+                                "error": type(e).__name__})
+      return 0
+
+  def _fail_requests(self, key, reqs, exc) -> None:
+    """Terminally fail ``reqs`` with ``exc``: the once-per-request final
+    accounting (inflight, admission, metrics, future).  Trace emission is
+    the caller's job — the recovery driver already closed these requests'
+    execute slices with outcome 'failed'."""
+    with self._lock:
+      for r in reqs:
+        self._inflight.discard(r.request_id)
+        self.admission.on_done(r)
+        self.metrics.on_fail(key)
+        fut = self._pending.pop(r.request_id, None)
+        if fut is not None:
+          fut._fail(exc)
+      if not self._pending:
+        self._idle.notify_all()
+
+  def _serve_batch(self, key, reqs, scheduled_s: float) -> int:
+    """The recovery driver: execute the picked batch, isolating failures by
+    bounded retry + bisection so innocent co-batched requests complete.
+
+    A LIFO stack of (sub-batch, retries left, attempt index) starts with
+    the whole batch.  A failed sub-batch is retried whole under its
+    ``transient_retries`` budget (exponential backoff — a transient blip
+    usually clears); once the budget is spent it is *bisected* and each
+    half re-enters the stack with a fresh budget.  A single poisoned
+    request in a batch of B therefore costs O(log B) extra launches — it
+    keeps landing in ever-smaller failing halves until it fails alone —
+    and total attempts are bounded by (retries+1)·(2B−1).  Every sub-batch
+    size is re-bucketed to its own power of two, so bisection launches hit
+    existing executable-cache entries (prewarm compiles every pow2 batch).
+
+    Accounting across attempts is once-per-request for final outcomes
+    (``on_complete`` / ``on_fail`` / admission / futures), per-attempt for
+    attempt-scoped telemetry (failure kinds, breaker transitions, batch
+    phase spans), and first-fixpoint-only for iteration observations
+    (``observed`` below) — a retried closure batch must not double-feed
+    the estimator.  Returns #requests completed (innocents complete even
+    when a poisoned sibling fails)."""
+    label = bucket_label(key)
+    observed: set = set()   # rids whose measured iterations were recorded
+    stack = [(list(reqs), self.transient_retries, 0)]
+    completed = 0
+    while stack:
+      sub, retries_left, attempt = stack.pop()
+      if attempt > 0 and self.tracer.enabled:
+        # a fresh execute slice per retried/bisected attempt — the failed
+        # attempt closed the previous one with outcome 'retried'
+        self.tracer.batch_attempt_begin([r.request_id for r in sub])
+      try:
+        results, info = self._attempt(
+            key, sub, observed, scheduled_s if attempt == 0 else None)
+      except Exception as e:  # noqa: BLE001 — classified + counted in _attempt
+        will_retry = retries_left > 0
+        will_bisect = not will_retry and self.bisect and len(sub) > 1
+        if self.tracer.enabled:
+          self.tracer.batch_attempt_fail(
+              [r.request_id for r in sub],
+              outcome="retried" if (will_retry or will_bisect) else "failed",
+              picked_t_s=scheduled_s if attempt == 0 else None,
+              args={"error": type(e).__name__})
+        if will_retry:
+          self.metrics.on_retry()
+          backoff = self.retry_backoff_s * (2.0 ** min(attempt, 3))
+          if backoff > 0.0:
+            time.sleep(backoff)
+          stack.append((sub, retries_left - 1, attempt + 1))
+        elif will_bisect:
+          mid = len(sub) // 2
+          self.metrics.on_retry(2)
+          if self.tracer.enabled:
+            self.tracer.instant(
+                "batch_bisect", cat="resilience",
+                args={"bucket": label, "batch": len(sub),
+                      "halves": [mid, len(sub) - mid],
+                      "error": type(e).__name__})
+          # each half gets the full transient budget (a rate-mode fault can
+          # hit an innocent half; one unlucky draw must not fail it), and
+          # the left half runs first (LIFO)
+          stack.append((sub[mid:], self.transient_retries, attempt + 1))
+          stack.append((sub[:mid], self.transient_retries, attempt + 1))
+        else:
+          self._fail_requests(key, sub, e)
+          self.tracer.instant("batch_fail", cat="batch",
+                              args={"bucket": label, "batch": len(sub),
+                                    "error": type(e).__name__})
+        continue
+      completed += self._complete_sub(key, sub, results, info, scheduled_s,
+                                      emit_pick=attempt == 0)
+    return completed
+
+  def _attempt(self, key, reqs, observed: set, start_s: Optional[float]):
+    """Execute one sub-batch once on the best currently-available arm.
+    Returns (results, info dict); raises the (already classified, counted,
+    and breaker-fed) failure otherwise.  ``start_s`` is the batch pick time
+    for the first attempt (so the fast path's spans match the historical
+    trace exactly); retries stamp their own start."""
+    label = bucket_label(key)
+    rids = [r.request_id for r in reqs]
     rb = self._batch_bucket(len(reqs))
-    iters_live = None
+    primary = self.resolve_placement(key, rb)
+    arm, probe = self.resilience.pick(key, primary,
+                                      lambda: self._fallback_arms(key))
+    backend, block, schedule = arm
+    if self.tracer.enabled and probe:
+      self.tracer.instant("breaker_probe", cat="resilience",
+                          args={"bucket": label, "backend": backend,
+                                "schedule": schedule})
+    faults = self.faults
+    attempt_s = self._clock() if start_s is None else start_s
+    phase = "stack"
     try:
       # fill the padded batch slots with copies of the last request — wasted
       # compute bounded at 2×, in exchange for a bounded executable set
       stacked = batching.stack_batch(key, reqs + [reqs[-1]] * (rb - len(reqs)))
       h2d_bytes = batching.stacked_nbytes(stacked)
       stacked_s = self._clock()
-      backend, block, schedule = self.resolve_placement(key, rb)
+      phase = "compile"
+      if faults is not None and faults.check("compile", label=label,
+                                             backend=backend,
+                                             request_ids=rids):
+        # raised BEFORE the cache is consulted: an injected compile failure
+        # must never poison the executable cache with a broken entry
+        raise InjectedFault("compile", label)
       misses_before = self.cache.misses
       compiled = self.cache.get_or_compile(
           self._exec_key(key, rb, backend, block, schedule),
@@ -477,70 +653,133 @@ class MMOEngine:
       # must not feed trace+compile time (orders of magnitude above steady
       # service) into the EWMA as if it were device latency
       executed_s = self._clock()
-      out = compiled(*stacked)
-      # block on the device result here so the device-compute window
-      # (executed_s → device_s) is honest: jax dispatch is async, and
-      # without the sync split_results' first np.asarray would absorb the
-      # whole device time into the host-side split span
-      jax.block_until_ready(out)
+      phase = "execute"
+      exec_fault = slow_rule = None
+      if faults is not None:
+        exec_fault = faults.check("execute", label=label, backend=backend,
+                                  request_ids=rids)
+        slow_rule = faults.check("slow", label=label, backend=backend,
+                                 request_ids=rids)
+
+      def run():
+        if exec_fault is not None:
+          raise InjectedFault("execute", label)
+        if slow_rule is not None:
+          time.sleep(slow_rule.delay_s)
+        out = compiled(*stacked)
+        # block on the device result here so the device-compute window
+        # (executed_s → device_s) is honest: jax dispatch is async, and
+        # without the sync the first np.asarray below would absorb the
+        # whole device time into the host-side split span
+        jax.block_until_ready(out)
+        return out
+
+      out = self._call_with_watchdog(run, label)
       device_s = self._clock()
+      # one D2H conversion for validation + split (np.asarray on numpy is
+      # free downstream)
+      out = (tuple(np.asarray(x) for x in out)
+             if isinstance(out, (tuple, list)) else np.asarray(out))
+      if faults is not None:
+        nf = faults.check("nonfinite", label=label, backend=backend,
+                          request_ids=rids)
+        if nf is not None:
+          out = batching.poison_output(
+              key, out,
+              [i for i, r in enumerate(reqs)
+               if not nf.request_ids or r.request_id in nf.request_ids])
+      iters_live = None
       if key.kind == "closure":
         # record measured convergence counts the moment the fixpoint has
-        # run — BEFORE splitting/fulfilling, so a batch that fails later in
-        # this step (poisoned split, a bad future callback) still feeds the
-        # estimator what the device actually measured.  Live slots only:
-        # padded slots are copies of the last request and would double-count
-        # its convergence behavior.
+        # run — BEFORE validation/splitting/fulfilling, so a batch that
+        # fails later in this attempt still feeds the estimator what the
+        # device actually measured.  Live slots only (padded slots are
+        # copies of the last request), and only rids not observed by an
+        # earlier attempt — a re-executed fixpoint measures the same
+        # convergence and must not double-feed the EWMA.
         iters_live = np.asarray(out[1])[:len(reqs)]
-        self.estimator.observe_iterations(key, iters_live)
+        fresh = [i for i, r in enumerate(reqs)
+                 if r.request_id not in observed]
+        if fresh:
+          self.estimator.observe_iterations(key, iters_live[fresh])
+          observed.update(reqs[i].request_id for i in fresh)
+      if self.validate_results:
+        bad = batching.validate_finite(key, out, len(reqs))
+        if bad:
+          # garbage must fail the batch, not reach callers: NaN means the
+          # kernel arm misbehaved (±inf is legitimate tropical output)
+          raise NonFiniteResultError(label, bad)
+      phase = "split"
       results = batching.split_results(key, reqs, out)
-    except Exception as e:  # noqa: BLE001 — fail the whole batch, keep serving
-      with self._lock:
-        for r in reqs:
-          self._inflight.discard(r.request_id)
-          self.admission.on_done(r)
-          self.metrics.on_fail(key)
-          self.tracer.request_picked(r.request_id, t_s=scheduled_s)
-          self.tracer.request_end(r.request_id, "failed", executing=True,
-                                  args={"error": type(e).__name__})
-          fut = self._pending.pop(r.request_id, None)
-          if fut is not None:
-            fut._fail(e)
-        if not self._pending:
-          self._idle.notify_all()
-      self.tracer.instant("batch_fail", cat="batch",
-                          args={"bucket": bucket_label(key),
-                                "error": type(e).__name__})
-      return 0
+      if len(results) != len(reqs):
+        # a short/long result list would silently wedge the unzipped
+        # futures forever; fail the batch loudly instead
+        raise RuntimeError(
+            f"split_results returned {len(results)} results for "
+            f"{len(reqs)} requests in {label}")
+    except Exception as e:  # noqa: BLE001 — classify, count, feed the breaker
+      kind = classify_failure(e, phase)
+      self.metrics.on_batch_failure(kind)
+      # only arm-implicating kinds feed the breaker: a host-side stack/split
+      # failure would fail identically on every backend (faults.py)
+      transition = (self.resilience.on_failure(key, arm)
+                    if kind in ARM_FAILURE_KINDS else None)
+      if self.tracer.enabled and transition == "open":
+        self.tracer.instant("breaker_open", cat="resilience",
+                            args={"bucket": label, "backend": backend,
+                                  "schedule": schedule, "kind": kind})
+      raise
     completed_s = self._clock()
+    transition = self.resilience.on_success(key, arm)
+    if self.tracer.enabled and transition == "close":
+      self.tracer.instant("breaker_close", cat="resilience",
+                          args={"bucket": label, "backend": backend,
+                                "schedule": schedule})
     # live service-latency feedback: the same signal that fills the metrics
     # windows (minus compile time — see executed_s above), normalized per
-    # padded slot.  Keyed by the schedule that actually executed — which
-    # resolve_placement may have downgraded to 'local' for this rb — so a
-    # dp cell never averages in local-path latencies; predict() falls back
-    # to the bucket's local cell while its distributed cell is cold.
+    # padded slot.  Keyed by the arm that ACTUALLY executed — which the
+    # breaker may have re-dispatched and resolve_placement may have
+    # downgraded to 'local' for this rb — so a dp cell never averages in
+    # local-path latencies and a fallback arm's cell prices itself.
     self.estimator.observe_batch(key, backend, schedule, rb,
                                  completed_s - executed_s)
+    info = {"start_s": attempt_s, "stacked_s": stacked_s,
+            "executed_s": executed_s, "device_s": device_s,
+            "completed_s": completed_s, "rb": rb, "h2d_bytes": h2d_bytes,
+            "cache_hit": cache_hit, "backend": backend,
+            "schedule": schedule, "iters_live": iters_live}
+    return results, info
+
+  def _complete_sub(self, key, reqs, results, info, scheduled_s: float,
+                    *, emit_pick: bool) -> int:
+    """Complete one successful sub-batch attempt: trace emission, batch
+    metrics, and the once-per-request final accounting.  ``scheduled_s``
+    stays the ORIGINAL batch pick time — queue/service windows and request
+    records measure what the caller experienced (service includes retry
+    time), while the batch phase spans use the attempt's own timestamps."""
+    completed_s = info["completed_s"]
     if self.tracer.enabled:
-      # emitted after the batch, with the timestamps measured above — the
-      # spans are exact but their recording cost sits outside the measured
-      # windows.  One call carries the whole batch's event set (phase spans,
-      # iteration slices, every member's pick + done) so the steady-state
-      # tracing cost is one lock acquisition per batch, not per request.
+      # one call carries the whole attempt's event set (phase spans,
+      # iteration slices, member picks + dones) so the steady-state tracing
+      # cost is one lock acquisition per batch, not per request
       self.tracer.batch_complete(
-          label=bucket_label(key), scheduled_s=scheduled_s,
-          stacked_s=stacked_s, executed_s=executed_s, device_s=device_s,
-          completed_s=completed_s, backend=backend, schedule=schedule,
-          batch=len(reqs), padded=rb, h2d_bytes=h2d_bytes,
-          cache_hit=cache_hit,
+          label=bucket_label(key), scheduled_s=info["start_s"],
+          stacked_s=info["stacked_s"], executed_s=info["executed_s"],
+          device_s=info["device_s"], completed_s=completed_s,
+          backend=info["backend"], schedule=info["schedule"],
+          batch=len(reqs), padded=info["rb"],
+          h2d_bytes=info["h2d_bytes"], cache_hit=info["cache_hit"],
           request_ids=[r.request_id for r in reqs],
           arrivals_s=[r.arrival_s for r in reqs],
-          iterations=iters_live)
+          iterations=info["iters_live"], emit_pick=emit_pick)
     with self._lock:
       self._batches += 1
       self.metrics.on_batch(
-          key, host_s=(stacked_s - scheduled_s) + (completed_s - device_s),
-          device_s=device_s - executed_s, h2d_bytes=h2d_bytes)
+          key,
+          host_s=((info["stacked_s"] - info["start_s"])
+                  + (completed_s - info["device_s"])),
+          device_s=info["device_s"] - info["executed_s"],
+          h2d_bytes=info["h2d_bytes"])
       for r in reqs:
         self._inflight.discard(r.request_id)
       for r, res in zip(reqs, results):
@@ -553,10 +792,93 @@ class MMOEngine:
                                  service_s=completed_s - scheduled_s)
         fut = self._pending.pop(r.request_id, None)
         if fut is not None:
-          fut._fulfill(res)
+          try:
+            fut._fulfill(res)
+          except Exception as cb:  # noqa: BLE001 — a bad future callback
+            # must not take down the serving loop or its co-batched
+            # siblings; the result IS delivered (state was set before the
+            # callback ran), so this request still counts completed
+            self.tracer.instant(
+                "future_callback_error", cat="engine",
+                args={"id": r.request_id, "error": type(cb).__name__})
       if not self._pending:
         self._idle.notify_all()
     return len(reqs)
+
+  def _call_with_watchdog(self, fn, label: str):
+    """Run ``fn`` under the engine watchdog (``watchdog_s``; None = inline,
+    the historical zero-overhead path).  On timeout the batch fails with
+    ``BatchTimeoutError`` instead of wedging the serving loop; the worker
+    thread is abandoned — XLA's async dispatch cannot be cancelled, so the
+    device computation may still finish later and its result is discarded
+    (DESIGN.md §Fault tolerance on why this is the least-bad option)."""
+    if self.watchdog_s is None:
+      return fn()
+    box: dict = {}
+    done = threading.Event()
+
+    def worker():
+      try:
+        box["out"] = fn()
+      except BaseException as e:  # noqa: BLE001 — marshalled to the caller
+        box["exc"] = e
+      finally:
+        done.set()
+
+    t = threading.Thread(target=worker, name="mmo-batch-watchdog",
+                         daemon=True)
+    t.start()
+    if not done.wait(self.watchdog_s):
+      raise BatchTimeoutError(label, self.watchdog_s)
+    if "exc" in box:
+      raise box["exc"]
+    return box["out"]
+
+  def _fallback_arms(self, key) -> tuple:
+    """Sibling arms for breaker re-dispatch, best first: every arm computes
+    bit-identical results for this bucket (one substrate, many kernels —
+    the SIMD² property), so traffic can move between them freely.
+
+    Order: a sharded bucket's first fallback is its own backend on the
+    local path (same kernel, no mesh collectives — survives schedule-level
+    faults); then the other backends on the local path ranked by cost-table
+    seconds, with the reference dense backend ('vector' — pure jnp, works
+    everywhere) forced last as the terminal arm.  ``fallback_backends``
+    overrides the backend order outright (deterministic tests, operator
+    pinning).  Memoized per bucket: stable executable-cache keys."""
+    with self._lock:
+      memo = self._fallback_arms_memo.get(key)
+      if memo is not None:
+        return memo
+      primary_backend, block = self.resolve_backend(key)
+      schedule = self.resolve_schedule(key)
+      arms = []
+      if schedule != "local":
+        arms.append((primary_backend, block, "local"))
+      if self.fallback_backends is not None:
+        order = [b for b in self.fallback_backends if b != primary_backend]
+      else:
+        from repro.tuning import dispatch as _dispatch
+        m, k, n = contract_shape(key)
+        ranked = []
+        for b in ("xla", "pallas"):
+          if b == primary_backend:
+            continue
+          try:
+            _, _, s = _dispatch.contraction_seconds(
+                key.op, m, k, n, key.dtypes[0], backend=b,
+                table=self.cost_table)
+          except Exception:  # noqa: BLE001 — an unpriceable arm is skipped
+            continue
+          ranked.append((s, b))
+        ranked.sort()
+        order = [b for _, b in ranked]
+        if primary_backend != "vector":
+          order.append("vector")
+      arms.extend((b, (), "local") for b in order)
+      memo = tuple(arms)
+      self._fallback_arms_memo[key] = memo
+      return memo
 
   def run_until_idle(self) -> int:
     """Drain the queue synchronously; returns total requests completed."""
@@ -657,6 +979,7 @@ class MMOEngine:
         "cache": self.cache.stats(),
         "scheduler": sched,
         "estimator_cells": cells,
+        "breakers": self.resilience.snapshot(),
         "trace": self.tracer.stats(),
     }
 

@@ -145,6 +145,8 @@ def render_prometheus(state: dict) -> str:
       "failed": "Requests failed by a batch execution error.",
       "batches": "Batches executed.",
       "h2d_bytes": "Host-to-device bytes pad-and-stacked into batches.",
+      "retries": "Sub-batches re-dispatched by the recovery path "
+                 "(transient retries + bisection halves).",
   }
   for name, count in sorted(m["counters"].items()):
     w.family(f"serve_{name}_total", "counter",
@@ -155,6 +157,12 @@ def render_prometheus(state: dict) -> str:
            "Admission rejections by reason kind.")
   for reason, count in sorted(m["rejected_by_reason"].items()):
     w.sample("serve_rejected_by_reason_total", count, reason=reason)
+
+  w.family("serve_batch_failures_total", "counter",
+           "Failed batch attempts by failure kind (every failed attempt "
+           "counts, including ones recovered by retry/bisection).")
+  for kind, count in sorted(m.get("batch_failures_by_kind", {}).items()):
+    w.sample("serve_batch_failures_total", count, kind=kind)
 
   # per-bucket outcome counters
   w.family("serve_bucket_completed_total", "counter",
@@ -244,6 +252,23 @@ def render_prometheus(state: dict) -> str:
     w.sample("serve_estimator_observations", cell["observations"], **labels)
     if cell.get("drift") is not None:
       w.sample("serve_estimator_drift_ratio", cell["drift"], **labels)
+
+  # circuit breakers: one gauge per (bucket, backend, schedule) arm
+  w.family("serve_breaker_state", "gauge",
+           "Circuit-breaker state per (bucket, backend, schedule) arm: "
+           "0=closed, 1=open, 2=half_open.")
+  w.family("serve_breaker_opens_total", "counter",
+           "Times each arm's breaker opened.")
+  w.family("serve_breaker_probes_total", "counter",
+           "Half-open probe batches sent to each arm.")
+  _breaker_gauge = {"closed": 0, "open": 1, "half_open": 2}
+  for cell in state.get("breakers", ()):
+    labels = dict(bucket=cell["bucket"], backend=cell["backend"],
+                  schedule=cell["schedule"])
+    w.sample("serve_breaker_state",
+             _breaker_gauge.get(cell["state"], 0), **labels)
+    w.sample("serve_breaker_opens_total", cell["opens"], **labels)
+    w.sample("serve_breaker_probes_total", cell["probes"], **labels)
 
   trace = state["trace"]
   w.family("serve_trace_events_total", "counter",

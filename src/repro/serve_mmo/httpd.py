@@ -7,8 +7,12 @@ a daemon thread next to the engine's serving loop:
                counters, per-bucket latency/host/device histograms, queue
                and executing gauges, estimator cells + drift, cache and
                flight-recorder counters.
-  /healthz   — liveness JSON: {"status": "ok", ...} while the process
-               answers; reports whether the serving loop thread is up.
+  /healthz   — health JSON: 200 {"status": "ok", ...} while every circuit
+               breaker is closed; 503 {"status": "degraded",
+               "open_breakers": [...]} naming the open (bucket, backend,
+               schedule) arms when any is open — a load balancer should
+               drain a degraded instance while it still answers.  Also
+               reports whether the serving loop thread is up.
   /snapshot  — the full ``engine.metrics_snapshot()`` JSON (rolling-window
                percentiles, admission state, estimator cells) — the same
                document ``--metrics-every`` tickers.
@@ -107,12 +111,23 @@ def _make_handler(engine):
                      render_prometheus(engine.observability_state()))
         elif path == "/healthz":
           loop = engine._thread
+          resilience = getattr(engine, "resilience", None)
+          open_breakers = ([] if resilience is None
+                           else resilience.open_arms())
+          degraded = bool(open_breakers)
           body = json.dumps({
-              "status": "ok",
+              # degraded ≠ dead: open breakers mean some arm is failing and
+              # its traffic rides a fallback — a load balancer should drain
+              # this instance (503) while it still answers requests
+              "status": "degraded" if degraded else "ok",
               "serving_loop_alive": bool(loop is not None and loop.is_alive()),
               "pending": engine.pending(),
+              "open_breakers": [
+                  {"bucket": c["bucket"], "backend": c["backend"],
+                   "schedule": c["schedule"], "state": c["state"]}
+                  for c in open_breakers],
           })
-          self._send(200, "application/json", body)
+          self._send(503 if degraded else 200, "application/json", body)
         elif path == "/snapshot":
           self._send(200, "application/json",
                      json.dumps(engine.metrics_snapshot(), default=float))

@@ -114,7 +114,7 @@ class ServeMetrics:
   """
 
   COUNTERS = ("submitted", "completed", "rejected", "expired", "failed",
-              "batches", "h2d_bytes")
+              "batches", "h2d_bytes", "retries")
   WINDOWS = ("queue", "service", "host", "device")
 
   def __init__(self, *, clock=None, window: int = 512):
@@ -124,6 +124,7 @@ class ServeMetrics:
     self._started_s = self._clock()
     self._counters = {name: 0 for name in self.COUNTERS}
     self._rejected_by_reason: dict[str, int] = {}
+    self._batch_failures_by_kind: dict[str, int] = {}
     self._buckets: dict[str, dict] = {}  # label → windows + histograms
 
   # -- engine hooks ------------------------------------------------------------
@@ -157,6 +158,23 @@ class ServeMetrics:
     with self._lock:
       self._counters["failed"] += 1
       self._bucket(key)["failed"] += 1
+
+  def on_retry(self, n: int = 1) -> None:
+    """``n`` sub-batches re-dispatched by the recovery path (a transient
+    retry counts 1, a bisection counts one per half).  Distinct from
+    ``on_fail``: retried requests have not failed — most never will."""
+    with self._lock:
+      self._counters["retries"] += int(n)
+
+  def on_batch_failure(self, kind: str) -> None:
+    """One failed batch *attempt*, classified (faults.FAILURE_KINDS).
+    Every failed attempt counts — including ones whose requests later
+    complete via retry/bisection — so the by-kind breakdown sees transient
+    noise that the request-level ``failed`` counter (final outcomes only)
+    never shows."""
+    with self._lock:
+      self._batch_failures_by_kind[kind] = (
+          self._batch_failures_by_kind.get(kind, 0) + 1)
 
   def on_batch(self, key=None, *, host_s: Optional[float] = None,
                device_s: Optional[float] = None,
@@ -213,6 +231,7 @@ class ServeMetrics:
           "uptime_s": self._clock() - self._started_s,
           "counters": dict(self._counters),
           "rejected_by_reason": dict(self._rejected_by_reason),
+          "batch_failures_by_kind": dict(self._batch_failures_by_kind),
       }
     buckets = {}
     for label, (completed, expired, failed, windows) in raw.items():
@@ -254,6 +273,7 @@ class ServeMetrics:
           "uptime_s": self._clock() - self._started_s,
           "counters": dict(self._counters),
           "rejected_by_reason": dict(self._rejected_by_reason),
+          "batch_failures_by_kind": dict(self._batch_failures_by_kind),
           "histogram_bounds_s": list(HISTOGRAM_BOUNDS_S),
           "buckets": buckets,
       }

@@ -168,14 +168,20 @@ class FlightRecorder:
                      batch: int, padded: int, h2d_bytes: int,
                      cache_hit: bool, request_ids: Sequence[int],
                      arrivals_s: Sequence[float],
-                     iterations=None) -> None:
+                     iterations=None, emit_pick: bool = True) -> None:
     """Emit one completed batch's whole event set in a single lock
     acquisition: the four phase spans (pad_and_stack / resolve_compile /
     device_compute / split_results), the apportioned squaring-iteration
     slices for closures, and every member request's queued→execute
     transition (at the pick instant) and ``execute`` end (outcome done,
     with its latency).  This is the serving loop's only steady-state trace
-    call, so its cost IS the tracing overhead the bench budgets."""
+    call, so its cost IS the tracing overhead the bench budgets.
+
+    ``emit_pick=False`` skips the per-request queued→execute transition:
+    retried/bisected sub-batches already closed ``queued`` and opened a
+    fresh ``execute`` slice via ``batch_attempt_fail`` /
+    ``batch_attempt_begin``, so only the terminal ``execute`` end is
+    emitted here — one ``e`` per ``b`` per attempt."""
     if not self.enabled:
       return
     tid = self._tid()
@@ -218,17 +224,67 @@ class FlightRecorder:
              "args": {"apportioned": True, "iterations": max_it}}
             for i in range(n))
     for rid, arrival_s in zip(request_ids, arrivals_s):
-      events.append({"ph": "e", "cat": "request", "id": rid,
-                     "name": "queued", "pid": _PID, "tid": tid,
-                     "ts": ts_sched})
-      events.append({"ph": "b", "cat": "request", "id": rid,
-                     "name": "execute", "pid": _PID, "tid": tid,
-                     "ts": ts_sched})
+      if emit_pick:
+        events.append({"ph": "e", "cat": "request", "id": rid,
+                       "name": "queued", "pid": _PID, "tid": tid,
+                       "ts": ts_sched})
+        events.append({"ph": "b", "cat": "request", "id": rid,
+                       "name": "execute", "pid": _PID, "tid": tid,
+                       "ts": ts_sched})
       events.append({"ph": "e", "cat": "request", "id": rid,
                      "name": "execute", "pid": _PID, "tid": tid,
                      "ts": ts_done,
                      "args": {"outcome": "done",
                               "latency_ms": (completed_s - arrival_s) * 1e3}})
+    self._emit(events)
+
+  # -- the recovery path (retries / bisection) ---------------------------------
+
+  def batch_attempt_begin(self, request_ids: Sequence[int], *,
+                          t_s: Optional[float] = None) -> None:
+    """Open a fresh ``execute`` slice for every member of a retried or
+    bisected sub-batch — the previous attempt closed its slice with outcome
+    'retried' (``batch_attempt_fail``), so each attempt reads as its own
+    execute span under the request's async track."""
+    if not self.enabled:
+      return
+    ts = self._ts(t_s)
+    tid = self._tid()
+    self._emit([{"ph": "b", "cat": "request", "id": rid, "name": "execute",
+                 "pid": _PID, "tid": tid, "ts": ts}
+                for rid in request_ids])
+
+  def batch_attempt_fail(self, request_ids: Sequence[int], *, outcome: str,
+                         picked_t_s: Optional[float] = None,
+                         t_s: Optional[float] = None,
+                         args: Optional[dict] = None) -> None:
+    """Close every member's open ``execute`` slice after a failed attempt:
+    ``outcome`` is 'retried' when recovery continues (retry or bisection)
+    or 'failed' at the terminal attempt.  ``picked_t_s`` handles the first
+    attempt, whose members never individually transitioned queued→execute
+    (the success path batches that into ``batch_complete``): their
+    ``queued`` end + ``execute`` begin are emitted first, at the pick
+    time — keeping one ``e`` per ``b`` whichever way the attempt ends."""
+    if not self.enabled:
+      return
+    ts = self._ts(t_s)
+    tid = self._tid()
+    events = []
+    if picked_t_s is not None:
+      ts_pick = picked_t_s * 1e6
+      for rid in request_ids:
+        events.append({"ph": "e", "cat": "request", "id": rid,
+                       "name": "queued", "pid": _PID, "tid": tid,
+                       "ts": ts_pick})
+        events.append({"ph": "b", "cat": "request", "id": rid,
+                       "name": "execute", "pid": _PID, "tid": tid,
+                       "ts": ts_pick})
+    end_args = {"outcome": outcome}
+    if args:
+      end_args.update(args)
+    events.extend({"ph": "e", "cat": "request", "id": rid, "name": "execute",
+                   "pid": _PID, "tid": tid, "ts": ts, "args": dict(end_args)}
+                  for rid in request_ids)
     self._emit(events)
 
   def instant(self, name: str, *, cat: str = "engine",

@@ -49,15 +49,23 @@ def _async_request_events(events):
 
 
 def _assert_balanced(events):
-  """Every async request slice must open exactly once and close exactly
-  once, begin before end — the invariant Perfetto needs to nest them."""
+  """Every async request slice must alternate open/close (b,e,b,e,... in
+  ring order), equal counts, each end at or after its begin — the invariant
+  Perfetto needs to nest them.  A request that was never retried has
+  exactly one pair; the recovery path opens one ``execute`` pair per
+  attempt (one ``e`` per ``b``)."""
   for (rid, name), evs in _async_request_events(events).items():
     phs = [ev["ph"] for ev in evs]
-    assert phs.count("b") == 1 and phs.count("e") == 1, \
+    assert phs.count("b") == phs.count("e"), \
         f"request {rid} slice {name!r} unbalanced: {phs}"
-    b = next(ev for ev in evs if ev["ph"] == "b")
-    e = next(ev for ev in evs if ev["ph"] == "e")
-    assert b["ts"] <= e["ts"]
+    assert phs == ["b", "e"] * (len(phs) // 2), \
+        f"request {rid} slice {name!r} does not alternate: {phs}"
+    for b, e in zip(evs[::2], evs[1::2]):
+      assert b["ts"] <= e["ts"]
+    # queued happens once; only execute may re-open (retries/bisection)
+    if name == "queued":
+      assert phs == ["b", "e"], \
+          f"request {rid} queued slice re-opened: {phs}"
 
 
 # ---------------------------------------------------------------------------
@@ -259,8 +267,11 @@ def test_trace_records_failed_batches():
   _assert_balanced(evs)
   fails = [ev for ev in evs if ev.get("cat") == "request"
            and ev["ph"] == "e" and ev["name"] == "execute"]
-  assert fails and fails[0]["args"] == {"outcome": "failed",
-                                        "error": "RuntimeError"}
+  # one execute end per attempt: retried attempts close 'retried', the
+  # terminal attempt closes 'failed' with the error
+  assert fails
+  assert all(ev["args"]["outcome"] == "retried" for ev in fails[:-1])
+  assert fails[-1]["args"] == {"outcome": "failed", "error": "RuntimeError"}
   assert any(ev["name"] == "batch_fail" for ev in evs)
 
 
@@ -397,8 +408,9 @@ def test_golden_exposition_rendering():
           "uptime_s": 12.5,
           "counters": {"submitted": 9, "completed": 6, "rejected": 1,
                        "expired": 1, "failed": 1, "batches": 3,
-                       "h2d_bytes": 4096},
+                       "h2d_bytes": 4096, "retries": 3},
           "rejected_by_reason": {"queue_full": 1},
+          "batch_failures_by_kind": {"execute": 2, "nonfinite": 1},
           "histogram_bounds_s": list(HISTOGRAM_BOUNDS_S),
           "buckets": {
               "closure/minplus/16/float32": {
@@ -424,6 +436,13 @@ def test_golden_exposition_rendering():
           {"bucket": "closure/minplus/16/float32", "backend": "xla",
            "schedule": "local", "seconds": 0.002, "observations": 4,
            "drift": 1.25}],
+      "breakers": [
+          {"bucket": "closure/minplus/16/float32", "backend": "xla",
+           "schedule": "local", "state": "open",
+           "consecutive_failures": 5, "opens": 1, "closes": 0, "probes": 0},
+          {"bucket": "closure/minplus/16/float32", "backend": "vector",
+           "schedule": "local", "state": "closed",
+           "consecutive_failures": 0, "opens": 0, "closes": 0, "probes": 1}],
       "trace": {"enabled": True, "capacity": 65536, "recorded": 120,
                 "live": 120, "dropped": 0},
   }

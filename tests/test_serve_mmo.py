@@ -542,3 +542,62 @@ def test_poisoned_batch_still_records_measured_iterations(monkeypatch):
   snap = eng.estimator.snapshot()
   assert snap["iterations"][label]["observations"] == 2
   assert any(lab.startswith("closure/minplus") for lab in snap["cells"])
+
+
+def test_split_count_mismatch_fails_loudly_not_wedged(monkeypatch):
+  """A split_results that returns the wrong number of results must fail the
+  batch (every future resolves with an error) rather than silently leaving
+  the unzipped tail pending forever — and the engine keeps serving."""
+  from repro.serve_mmo import batching as batching_mod
+
+  eng = MMOEngine(backend="xla", max_batch=4, transient_retries=0,
+                  bisect=False, retry_backoff_s=0.0)
+  futs = [eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=i)))
+          for i in range(3)]
+
+  real_split = batching_mod.split_results
+  monkeypatch.setattr(
+      batching_mod, "split_results",
+      lambda key, reqs, out: real_split(key, reqs, out)[:-1])  # drop one
+  assert eng.step() == 0
+  assert eng._inflight == set() and eng.pending() == 0
+  for f in futs:
+    assert f.done()
+    with pytest.raises(RuntimeError, match="split_results returned 2"):
+      f.result()
+
+  monkeypatch.setattr(batching_mod, "split_results", real_split)
+  ok = eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=9)))
+  assert eng.run_until_idle() == 1
+  assert ok.result().value.shape == (12, 12)
+  assert eng._inflight == set() and eng.pending() == 0
+
+
+def test_future_callback_error_does_not_kill_serving():
+  """A consumer hook that raises out of future fulfillment must not take
+  down the batch's siblings or the serving loop: the result is already
+  delivered (state set before the hook ran), the error is traced, and the
+  request still counts completed."""
+  eng = MMOEngine(backend="xla", max_batch=4)
+  futs = [eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=i)))
+          for i in range(3)]
+
+  orig = futs[1]._fulfill
+  def exploding_fulfill(res):
+    orig(res)  # state is set first — then the consumer-side hook blows up
+    raise RuntimeError("consumer callback boom")
+  futs[1]._fulfill = exploding_fulfill
+
+  assert eng.step() == 3  # the raising callback's request still completes
+  assert eng._inflight == set() and eng.pending() == 0
+  for f in futs:
+    assert f.done() and f.result().value.shape == (12, 12)
+  snap = eng.metrics_snapshot()
+  assert snap["counters"]["completed"] == 3
+  assert snap["counters"]["failed"] == 0
+  names = [ev["name"] for ev in eng.export_trace()["traceEvents"]
+           if ev.get("ph") == "i"]
+  assert "future_callback_error" in names
+
+  ok = eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=9)))
+  assert eng.run_until_idle() == 1 and ok.state == "done"
