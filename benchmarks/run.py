@@ -23,6 +23,8 @@ import traceback
 
 
 def main() -> None:
+  from repro.analysis.sanitize import maybe_enable_sanitize
+  maybe_enable_sanitize()  # REPRO_SANITIZE=1: debug_nans + analyzer preflight
   from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
                           microbench_shapes, microbench_square, qos_bench,
                           resilience_bench, roofline_table, serve_bench,

@@ -1,0 +1,39 @@
+"""repro.analysis — dependency-free static analysis for the repro engine.
+
+Three rule families (see DESIGN.md §Static analysis):
+
+  * ``semiring`` — literal pad/identity tables cross-checked against the
+    live ``core.semiring`` registry, plus numeric law checking over
+    adversarial floats (repro.analysis.laws);
+  * ``locks``    — a declared GUARDED_BY table for serve_mmo mutable state
+    enforced by an AST lock-domination pass (repro.analysis.lock_rules);
+  * ``trace``    — host/trace boundary hygiene for jit/pallas-reachable
+    functions and executable-cache key coverage
+    (repro.analysis.trace_rules).
+
+Run it::
+
+    python -m repro.analysis                # human output, exit 1 on new
+    python -m repro.analysis --json         # machine output (CI artifact)
+    python -m repro.analysis --rules locks  # one family (or rule id)
+
+Findings carry a line-independent fingerprint; known-accepted ones live in
+``baseline.json`` next to this package, and one-off exceptions are
+suppressed in source with ``# repro: ignore[rule-id]``.
+"""
+from repro.analysis.core import (FAMILIES, Context, Finding, Module, Report,
+                                 all_rules, format_human, format_json,
+                                 load_baseline, load_context, rule, run,
+                                 save_baseline, select_rules)
+
+# importing the rule modules registers their rules with the registry
+from repro.analysis import laws as _laws                      # noqa: F401
+from repro.analysis import lock_rules as _lock_rules          # noqa: F401
+from repro.analysis import semiring_rules as _semiring_rules  # noqa: F401
+from repro.analysis import trace_rules as _trace_rules        # noqa: F401
+
+__all__ = [
+    "FAMILIES", "Context", "Finding", "Module", "Report", "all_rules",
+    "format_human", "format_json", "load_baseline", "load_context", "rule",
+    "run", "save_baseline", "select_rules",
+]

@@ -1,0 +1,52 @@
+"""REPRO_SANITIZE=1 — opt-in hardened mode for tests and benchmarks.
+
+When the environment variable ``REPRO_SANITIZE`` is a truthy value
+(``1``/``true``/``yes``), entry points that call
+:func:`maybe_enable_sanitize` get two extra safety nets:
+
+  * ``jax_debug_nans`` — JAX re-runs any primitive that produced a NaN
+    un-jitted and raises at the producing op, turning silent poison (a NaN
+    that an unfortunate ``max`` later *hides*) into a loud failure at the
+    source;
+  * an analyzer pre-flight — ``repro.analysis`` runs over ``src/repro``
+    before any workload, so a lock-discipline or pad-table regression
+    aborts the run before it can produce misleading numbers.
+
+It is opt-in (default off) because debug_nans forcibly deoptimizes and
+some semirings legitimately *route around* NaN (the law checker covers
+NaN propagation separately); the tier-1 suite must not change behavior
+under default settings.
+"""
+from __future__ import annotations
+
+import os
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def sanitize_requested(environ=None) -> bool:
+  env = os.environ if environ is None else environ
+  return str(env.get("REPRO_SANITIZE", "")).strip().lower() in _TRUTHY
+
+
+def maybe_enable_sanitize(*, preflight: bool = True) -> bool:
+  """Enable sanitize mode if requested; returns whether it is active.
+
+  Raises RuntimeError when the analyzer pre-flight finds new findings —
+  a dirty tree must not run workloads in sanitize mode.
+  """
+  if not sanitize_requested():
+    return False
+  import jax
+  jax.config.update("jax_debug_nans", True)
+  if preflight:
+    from repro import analysis
+    from repro.analysis.__main__ import DEFAULT_BASELINE, DEFAULT_ROOT
+    report = analysis.run(DEFAULT_ROOT,
+                          baseline=analysis.load_baseline(DEFAULT_BASELINE))
+    if not report.ok:
+      raise RuntimeError(
+          "REPRO_SANITIZE pre-flight failed — repro.analysis reports "
+          f"{len(report.findings)} new finding(s):\n"
+          + "\n".join(str(f) for f in report.findings))
+  return True

@@ -1,0 +1,189 @@
+"""AST rules for semiring-consistency: literal tables vs the live registry.
+
+The codebase's convention for per-ring constants is the *op-keyed dict* —
+``{"minplus": ..., "maxmul": ..., ...}`` — in core/closure.py
+(_SELF_VALUES / _MISSING_VALUES), core/semiring.py (_CONTRACTION_PADS),
+and wherever the next subsystem grows one.  Three things can rot:
+
+  * a new ring lands in the registry but a table is never extended
+    (``semiring-table-coverage`` — every op-keyed dict must cover ALL_OPS
+    exactly, no missing mnemonics, no unknown ones);
+  * a pad pair stops satisfying ⊗(pa, pb) == ⊕-identity
+    (``semiring-pad-consistency`` — any op-keyed dict of 2-tuples is
+    treated as a pad table and re-verified numerically against the live
+    registry operators);
+  * someone hardcodes an identity instead of reading the registry
+    (``semiring-hardcoded-identity`` — ±inf literals in the modules that
+    implement contraction/padding must come from an op-keyed table or the
+    registry; a bare ``jnp.inf`` accumulator init is exactly the bug class
+    that silently corrupts one ring and not the other eight).
+
+The numeric side of the family (law checking over adversarial floats)
+lives in repro.analysis.laws.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis.core import Context, Finding, rule
+from repro.core import semiring as sr_mod
+
+__all__ = ["const_float", "op_keyed_dicts"]
+
+# modules whose ±inf literals must be registry-sourced — the contraction /
+# padding implementations plus the sparse seed path.  core/semiring.py is
+# exempt: it IS the registry, its literals are the source of truth.
+_IDENTITY_SCOPED = ("core/closure.py", "core/mmo.py", "core/sparse.py",
+                    "kernels/semiring_mmo.py", "serve_mmo/batching.py")
+
+# a dict literal is "op-keyed" when it has at least this many registry
+# mnemonics as keys (guards against flagging unrelated small dicts)
+_MIN_OP_KEYS = 5
+
+
+def const_float(node) -> Optional[float]:
+  """Evaluate the constant-float spellings the repo uses, else None:
+  literals, -x, float("inf"), float(np.inf), np.inf / math.inf / jnp.inf."""
+  if isinstance(node, ast.Constant) and isinstance(node.value, (int, float,
+                                                                bool)):
+    return float(node.value)
+  if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+    inner = const_float(node.operand)
+    return None if inner is None else -inner
+  if isinstance(node, ast.Attribute) and node.attr in ("inf", "nan"):
+    return float(node.attr)
+  if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+      and node.func.id == "float" and len(node.args) == 1
+      and not node.keywords):
+    arg = node.args[0]
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+      try:
+        return float(arg.value)
+      except ValueError:
+        return None
+    return const_float(arg)
+  return None
+
+
+def _dict_name(module_tree, dict_node) -> str:
+  """Assignment-target name of a dict literal (for messages), else ''."""
+  for node in ast.walk(module_tree):
+    if isinstance(node, ast.Assign) and node.value is dict_node:
+      targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+      if targets:
+        return targets[0]
+    if (isinstance(node, ast.AnnAssign) and node.value is dict_node
+        and isinstance(node.target, ast.Name)):
+      return node.target.id
+  return ""
+
+
+def op_keyed_dicts(module):
+  """(dict node, name, {op: value node}) for every op-keyed dict literal."""
+  out = []
+  for node in ast.walk(module.tree):
+    if not isinstance(node, ast.Dict):
+      continue
+    keys = {}
+    for k, v in zip(node.keys, node.values):
+      if isinstance(k, ast.Constant) and isinstance(k.value, str):
+        keys[k.value] = v
+    if sum(1 for k in keys if k in sr_mod.ALL_OPS) >= _MIN_OP_KEYS:
+      out.append((node, _dict_name(module.tree, node), keys))
+  return out
+
+
+@rule("semiring-table-coverage", family="semiring")
+def _rule_table_coverage(ctx: Context) -> list:
+  """Every op-keyed dict must cover ALL_OPS exactly."""
+  out = []
+  registered = set(sr_mod.ALL_OPS)
+  for mod in ctx.modules:
+    for node, name, keys in op_keyed_dicts(mod):
+      label = f"op-keyed table {name or '<anonymous>'}"
+      missing = sorted(registered - set(keys))
+      unknown = sorted(set(keys) - registered)
+      if missing:
+        out.append(Finding(
+            rule="semiring-table-coverage", path=mod.relpath,
+            line=node.lineno,
+            message=f"{label} is missing registered op(s) "
+                    f"{missing} — every ring needs an entry"))
+      if unknown:
+        out.append(Finding(
+            rule="semiring-table-coverage", path=mod.relpath,
+            line=node.lineno,
+            message=f"{label} has key(s) {unknown} that are not in the "
+                    f"semiring registry"))
+  return out
+
+
+@rule("semiring-pad-consistency", family="semiring")
+def _rule_pad_consistency(ctx: Context) -> list:
+  """Op-keyed pad-pair tables must satisfy ⊗(pa, pb) == ⊕-identity."""
+  from repro.analysis.laws import np_ops
+  out = []
+  for mod in ctx.modules:
+    for node, name, keys in op_keyed_dicts(mod):
+      label = name or "<anonymous>"
+      for op, value in keys.items():
+        if op not in sr_mod.ALL_OPS:
+          continue
+        if not (isinstance(value, (ast.Tuple, ast.List))
+                and len(value.elts) == 2):
+          continue  # not a pad-pair table entry
+        pa, pb = (const_float(e) for e in value.elts)
+        if pa is None or pb is None:
+          continue  # non-constant pair: not a literal pad table
+        sr = sr_mod.get(op)
+        _, otimes = np_ops(sr)
+        if sr.boolean:
+          prod = float(otimes(np.bool_(pa), np.bool_(pb)))
+          ident = float(np.bool_(sr.oplus_identity))
+        else:
+          prod = float(otimes(np.float64(pa), np.float64(pb)))
+          ident = float(sr.oplus_identity)
+        if np.isnan(prod) or prod != ident:
+          out.append(Finding(
+              rule="semiring-pad-consistency", path=mod.relpath,
+              line=value.lineno,
+              message=f"pad table {label}[{op!r}] == ({pa!r}, {pb!r}) but "
+                      f"⊗(pa, pb) == {prod!r}, want the ⊕-identity "
+                      f"{ident!r} — padded lanes would corrupt results"))
+  return out
+
+
+@rule("semiring-hardcoded-identity", family="semiring")
+def _rule_hardcoded_identity(ctx: Context) -> list:
+  """±inf literals in contraction/padding modules must be table-sourced."""
+  out = []
+  for mod in ctx.modules:
+    if not any(mod.relpath.endswith(s) for s in _IDENTITY_SCOPED):
+      continue
+    table_spans = set()
+    for node, _, _ in op_keyed_dicts(mod):
+      table_spans.update(range(node.lineno, (node.end_lineno or node.lineno)
+                               + 1))
+    seen = set()
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.Dict):
+        continue
+      value = None
+      if isinstance(node, (ast.Call, ast.Attribute)):
+        value = const_float(node)
+      if value is None or not np.isinf(value):
+        continue
+      if node.lineno in table_spans or node.lineno in seen:
+        continue
+      seen.add(node.lineno)
+      out.append(Finding(
+          rule="semiring-hardcoded-identity", path=mod.relpath,
+          line=node.lineno,
+          message=f"hardcoded {value!r} outside an op-keyed table — "
+                  f"semiring identities/pads must come from the "
+                  f"core.semiring registry (one ring's identity is another "
+                  f"ring's corruption)"))
+  return out

@@ -25,6 +25,7 @@ _NP = len(_PRIMS)
 # mma = mul + add (the baseline PE).  Ops reuse the baseline's mul/add where
 # the semantics allow; rows list *additional* circuits when added to an MMA
 # PE, and *all* circuits when built dedicated.
+# repro: ignore[semiring-table-coverage] — extra-over-baseline: no mma row
 _EXTRA = {   # added to an MMA PE (mul+add exist)
     "minplus": {"add": 1, "cmp": 1},   # ⊗-position adder + ⊕ comparator
     "maxplus": {"add": 1, "cmp": 1},
@@ -35,6 +36,7 @@ _EXTRA = {   # added to an MMA PE (mul+add exist)
     "orand":   {"logic": 2},
     "addnorm": {"sqr": 1},             # |a−b|² datapath (sub folded in)
 }
+# repro: ignore[semiring-table-coverage] — dedicated units exclude the PE
 _DEDICATED = {  # standalone unit (no mma circuits to reuse)
     "minplus": {"add": 2, "cmp": 1, "ctrl": 1},
     "maxplus": {"add": 2, "cmp": 1, "ctrl": 1},
@@ -82,10 +84,12 @@ def _combined_vec(ops, w: int = 16) -> np.ndarray:
 
 
 # --- calibration against published Table 5 ---------------------------------
+# repro: ignore[semiring-table-coverage] — paper Table 5 has no mma row
 _PAPER_5A = {"minplus": 1.21, "maxplus": 1.21, "minmul": 1.12,
              "maxmul": 1.12, "minmax": 1.01, "maxmin": 1.01, "orand": 1.04,
              "addnorm": 1.18}
 _PAPER_5A_ALL = 1.69
+# repro: ignore[semiring-table-coverage] — paper Table 5 has no mma row
 _PAPER_5B = {"minplus": 0.26, "maxplus": 0.26, "minmul": 1.03,
              "maxmul": 1.03, "minmax": 0.06, "maxmin": 0.06, "orand": 0.08,
              "addnorm": 0.19}

@@ -260,9 +260,19 @@ def closure_pad_values(op) -> tuple:
   Padding a prepared adjacency to (nb, nb) with ``missing`` everywhere and
   ``self`` on the new diagonal adds isolated vertices, so the closure of the
   padded matrix restricted to the original block equals the original closure
-  — the invariant the serving layer's shape bucketing relies on.
+  — the invariant the serving layer's shape bucketing relies on (and that
+  repro.analysis's semiring-closure-pads rule verifies numerically).
+
+  Rings without a ⊗-identity (addnorm) have no such embedding at all:
+  ``(x − missing)² == x²`` lets pad vertices feed values back into the real
+  block after one squaring, so closure requests on them are refused here —
+  at request construction (api.closure_request) and again at batch stacking.
   """
   sr = sr_mod.get(op)
+  if sr.otimes_identity is None:
+    raise ValueError(
+        f"op {sr.name!r} has no ⊗-identity, so adjacency padding cannot "
+        f"embed isolated vertices — closure is undefined for this ring")
   return _MISSING_VALUES[sr.name], _SELF_VALUES[sr.name]
 
 

@@ -38,6 +38,11 @@ class Semiring:
     oplus:           reduction operator (addition-like, associative+commutative).
     otimes:          element operator applied before the k-contraction.
     oplus_identity:  identity element of ``oplus`` (used to pad / init tiles).
+    otimes_identity: identity element of ``otimes`` (the algebraic "1"), or
+                     None when the op has none (addnorm's squared difference
+                     is not a semiring multiply — the paper's "beyond GEMM"
+                     point).  Consumed by the static-analysis law checker
+                     (repro.analysis.laws) and the sparse seed validation.
     algorithm:       representative algorithm from paper Table 1 (docs only).
     boolean:         operates on {0,1}/bool lattice (or-and).
     mxu_rewrite:     name of an exact MXU-reuse rewrite ('matmul', 'addnorm',
@@ -51,6 +56,7 @@ class Semiring:
   oplus: Callable[[Array, Array], Array]
   otimes: Callable[[Array, Array], Array]
   oplus_identity: float
+  otimes_identity: Optional[float]
   algorithm: str
   boolean: bool = False
   mxu_rewrite: Optional[str] = None
@@ -84,6 +90,7 @@ MMA = _register(
         oplus=jnp.add,
         otimes=jnp.multiply,
         oplus_identity=0.0,
+        otimes_identity=1.0,
         algorithm="GEMM / matrix inverse",
         mxu_rewrite="matmul",
     )
@@ -95,6 +102,7 @@ MINPLUS = _register(
         oplus=jnp.minimum,
         otimes=jnp.add,
         oplus_identity=float(np.inf),
+        otimes_identity=0.0,
         algorithm="all-pairs shortest paths",
         accumulate_f32=False,
     )
@@ -106,6 +114,7 @@ MAXPLUS = _register(
         oplus=jnp.maximum,
         otimes=jnp.add,
         oplus_identity=float(-np.inf),
+        otimes_identity=0.0,
         algorithm="maximum cost (critical path)",
         accumulate_f32=False,
     )
@@ -117,6 +126,7 @@ MINMUL = _register(
         oplus=jnp.minimum,
         otimes=jnp.multiply,
         oplus_identity=float(np.inf),
+        otimes_identity=1.0,
         algorithm="minimum reliability paths",
         accumulate_f32=False,
     )
@@ -128,6 +138,7 @@ MAXMUL = _register(
         oplus=jnp.maximum,
         otimes=jnp.multiply,
         oplus_identity=float(-np.inf),
+        otimes_identity=1.0,
         algorithm="maximum reliability paths",
         accumulate_f32=False,
     )
@@ -139,6 +150,7 @@ MINMAX = _register(
         oplus=jnp.minimum,
         otimes=jnp.maximum,
         oplus_identity=float(np.inf),
+        otimes_identity=float(-np.inf),
         algorithm="minimum spanning tree",
         accumulate_f32=False,
     )
@@ -150,6 +162,7 @@ MAXMIN = _register(
         oplus=jnp.maximum,
         otimes=jnp.minimum,
         oplus_identity=float(-np.inf),
+        otimes_identity=float(np.inf),
         algorithm="maximum capacity paths",
         accumulate_f32=False,
     )
@@ -161,6 +174,7 @@ ORAND = _register(
         oplus=jnp.logical_or,
         otimes=jnp.logical_and,
         oplus_identity=0.0,  # False
+        otimes_identity=1.0,  # True
         algorithm="transitive & reflexive closure",
         boolean=True,
         mxu_rewrite="orand",
@@ -174,6 +188,7 @@ ADDNORM = _register(
         oplus=jnp.add,
         otimes=_sq_diff,
         oplus_identity=0.0,
+        otimes_identity=None,  # (a-b)^2 has no right/left identity: not a true semiring
         algorithm="L2 distance (KNN / k-means)",
         mxu_rewrite="addnorm",
     )

@@ -57,13 +57,88 @@ def mmo_sparse24(vals: Array, idx: Array, b: Array, c=None, *,
 
 # --- CSR SpGEMM reference (numpy; the "cuSparse arm" of Fig 14) -------------
 
+# Per-ring "absent" entry value: a stored matrix drops entries equal to this,
+# and the contraction seeds its accumulator so dropped entries contribute
+# nothing.  Soundness requires absent to be a ⊗-annihilator mapping to the
+# ⊕-identity — ⊗(absent, x) must equal the ⊕-identity for every x in the
+# ring's domain — which ``validate_csr_seed`` re-verifies numerically
+# (repro.analysis runs it over adversarial floats).  For the mul/max rings
+# the annihilator property holds on the engine's positive-weight domain
+# (0 is the no-edge sentinel there, matching core/closure.py).  addnorm has
+# NO absent value — (absent−b)² cannot be 0 for all b — so sparse storage is
+# undefined for it, exactly like closure padding.
+_ABSENT = {
+    "mma": 0.0,
+    "minplus": float(np.inf),
+    "maxplus": float(-np.inf),
+    "minmul": float(np.inf),
+    "maxmul": 0.0,
+    "minmax": float(np.inf),
+    "maxmin": 0.0,
+    "orand": 0.0,       # False
+    "addnorm": None,    # no ⊗-annihilator: sparsity undefined
+}
 
-def to_csr(a: np.ndarray):
+
+def csr_absent_value(op: str) -> float:
+  """The entry value ``to_csr`` drops for ``op`` (its ⊗-annihilator).
+
+  Raises ValueError for rings with no annihilator (addnorm)."""
+  sr = sr_mod.get(op)
+  absent = _ABSENT[sr.name]
+  if absent is None:
+    raise ValueError(
+        f"op {sr.name!r} has no ⊗-annihilator, so absent entries cannot "
+        f"drop out of the contraction — CSR storage is undefined for it")
+  return absent
+
+
+def validate_csr_seed(op: str, *, samples=None) -> None:
+  """Check numerically that dropping ``op``'s absent value is sound: for
+  domain operands x, y the absorption law ⊕(⊗(absent, x), y) == y must hold
+  (and never produce NaN) — an absent entry's product contributes nothing.
+
+  Note this is checked on the ring's *operating domain* (positive weights
+  for the mul/maxmin rings, where 0 is the no-edge sentinel — the same data
+  contract core/closure.py documents), not over all floats: maxmul's
+  absent 0 absorbs under max only because stored products are positive.
+  Raises ValueError when the table entry is unsound — this is the
+  semiring-registry cross-check the analyzer's law family leans on."""
+  sr = sr_mod.get(op)
+  absent = csr_absent_value(op)  # raises for addnorm
+  if samples is None:
+    samples = ([False, True] if sr.boolean else
+               [0.25, 1.0, 2.0] if sr.name in ("minmul", "maxmul", "maxmin")
+               else [-3.0, -1.0, 0.0, 0.5, 2.0])
+  cast = (lambda v: jnp.bool_(v)) if sr.boolean else \
+      (lambda v: jnp.float64(v))
+  for x in samples:
+    prod = sr.otimes(cast(absent), cast(x))
+    if not sr.boolean and np.isnan(np.float64(np.asarray(prod))):
+      raise ValueError(
+          f"CSR absent value {absent!r} for op {op!r} poisons the "
+          f"contraction: ⊗({absent!r}, {x!r}) is NaN")
+    for y in samples:
+      got = np.float64(np.asarray(sr.oplus(prod, cast(y))))
+      want = np.float64(np.asarray(cast(y)))
+      if np.isnan(got) or got != want:
+        raise ValueError(
+            f"CSR absent value {absent!r} for op {op!r} is not absorbed: "
+            f"⊕(⊗({absent!r}, {x!r}), {y!r}) == {got!r}, want {y!r} — "
+            f"dropped entries would change results")
+
+
+def to_csr(a: np.ndarray, *, op: str = "mma"):
+  """CSR-compress ``a``, dropping entries equal to the ring's absent value
+  (validated against the semiring registry; op="mma" drops zeros, matching
+  the historical behavior)."""
+  validate_csr_seed(op)
+  absent = csr_absent_value(op)
   m, _ = a.shape
   indptr = [0]
   indices, data = [], []
   for i in range(m):
-    nz = np.nonzero(a[i])[0]
+    nz = np.nonzero(a[i] != absent)[0]
     indices.append(nz)
     data.append(a[i, nz])
     indptr.append(indptr[-1] + len(nz))
@@ -72,7 +147,48 @@ def to_csr(a: np.ndarray):
           np.zeros(0, a.dtype))
 
 
+def csr_spmm(indptr, indices, data, b: np.ndarray, *,
+             op: str = "mma") -> np.ndarray:
+  """Semiring CSR×dense SpMM, result identical to the dense contraction.
+
+  Rows are seeded with the *absorbed product* ⊗(absent, absent) — what a
+  dropped entry contributes in the dense op (constant over the ring's
+  domain; +inf for minplus, "no path") — so rows with no stored entries
+  match the dense result, and absorption (``validate_csr_seed``) guarantees
+  the seed vanishes the moment a stored product lands."""
+  validate_csr_seed(op)
+  sr = sr_mod.get(op)
+  absent = csr_absent_value(op)
+  m = len(indptr) - 1
+  if sr.boolean:
+    empty = bool(np.asarray(sr.otimes(jnp.bool_(absent), jnp.bool_(absent))))
+    out = np.full((m, b.shape[1]), empty)
+    b = b.astype(bool)
+    for i in range(m):
+      lo, hi = indptr[i], indptr[i + 1]
+      if hi > lo:
+        prod = np.asarray(sr.otimes(jnp.asarray(data[lo:hi][:, None]),
+                                    jnp.asarray(b[indices[lo:hi]])))
+        out[i] = np.asarray(
+            sr_mod.oplus_reduce(sr, jnp.asarray(prod), axis=0))
+    return out
+  empty = np.float64(np.asarray(
+      sr.otimes(jnp.float64(absent), jnp.float64(absent))))
+  out = np.full((m, b.shape[1]), empty, np.float64)
+  for i in range(m):
+    lo, hi = indptr[i], indptr[i + 1]
+    if hi > lo:
+      prod = np.asarray(sr.otimes(
+          jnp.asarray(data[lo:hi][:, None].astype(np.float64)),
+          jnp.asarray(b[indices[lo:hi]].astype(np.float64))))
+      out[i] = np.asarray(
+          sr_mod.oplus_reduce(sr, jnp.asarray(prod), axis=0))
+  return out
+
+
 def csr_spmm_np(indptr, indices, data, b: np.ndarray) -> np.ndarray:
+  """The historical mma fast path (plain @-based row gather) used by the
+  Fig-14 density-crossover benchmark."""
   m = len(indptr) - 1
   out = np.zeros((m, b.shape[1]), np.float64)
   for i in range(m):

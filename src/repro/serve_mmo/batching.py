@@ -213,6 +213,7 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
                     None)  # feature dim is never padded raggedly
       # mask padded corpus rows to +inf so they lose every top-k comparison
       row_ok = jnp.arange(d2.shape[-1]) < valid[:, None]  # (R, rb)
+      # repro: ignore[semiring-hardcoded-identity] — top-k mask, not a pad
       d2 = jnp.where(row_ok[:, None, :], d2, jnp.inf)
       neg, idx = jax.lax.top_k(-d2, k)
       return -neg, idx

@@ -472,7 +472,7 @@ class MMOEngine:
     return (key, rb, backend, block, schedule,
             None if schedule == "local" else self._mesh_sig)
 
-  def _expire(self, reqs) -> None:
+  def _expire_locked(self, reqs) -> None:
     """Fail requests whose deadline passed while queued (or that the policy
     failed fast as hopeless).  Engine lock held by the caller."""
     self._expired += len(reqs)
@@ -497,7 +497,7 @@ class MMOEngine:
       picked = self.scheduler.next_batch(now=self._clock())
       expired = self.scheduler.take_expired()
       if expired:
-        self._expire(expired)
+        self._expire_locked(expired)
       if picked is None:
         return 0
       key, reqs = picked
@@ -885,7 +885,9 @@ class MMOEngine:
     total = 0
     while True:
       done = self.step()
-      if done == 0 and len(self.scheduler) == 0:
+      with self._lock:
+        drained = len(self.scheduler) == 0
+      if done == 0 and drained:
         return total
       total += done
 
@@ -996,8 +998,10 @@ class MMOEngine:
     the steady-state guarantee benchmarks/serve_bench.py asserts.
     """
     from repro.serve_mmo.scheduler import request_bucket
-    seen = {request_bucket(req, self.scheduler.min_bucket)
-            for req in sample_reqs}
+    with self._lock:  # scheduler config is engine-lock guarded state
+      min_bucket = self.scheduler.min_bucket
+      max_batch = self.scheduler.max_batch
+    seen = {request_bucket(req, min_bucket) for req in sample_reqs}
     before = self.cache.misses
     for key in seen:
       rb = 1
@@ -1009,9 +1013,9 @@ class MMOEngine:
                 key, backend=backend, block=block, interpret=self.interpret,
                 mesh=self.mesh, schedule=s),
             batching.abstract_batch(key, rb))
-        if rb >= self.scheduler.max_batch:
+        if rb >= max_batch:
           break
-        rb = self._batch_bucket(min(2 * rb, self.scheduler.max_batch))
+        rb = self._batch_bucket(min(2 * rb, max_batch))
     return self.cache.misses - before
 
   # -- background serving loop -----------------------------------------------

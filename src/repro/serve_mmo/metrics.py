@@ -129,7 +129,8 @@ class ServeMetrics:
 
   # -- engine hooks ------------------------------------------------------------
 
-  def _bucket(self, key) -> dict:
+  def _bucket_locked(self, key) -> dict:
+    # caller holds self._lock (enforced by repro.analysis lock-discipline)
     label = bucket_label(key)
     b = self._buckets.get(label)
     if b is None:
@@ -152,12 +153,12 @@ class ServeMetrics:
   def on_expire(self, key) -> None:
     with self._lock:
       self._counters["expired"] += 1
-      self._bucket(key)["expired"] += 1
+      self._bucket_locked(key)["expired"] += 1
 
   def on_fail(self, key) -> None:
     with self._lock:
       self._counters["failed"] += 1
-      self._bucket(key)["failed"] += 1
+      self._bucket_locked(key)["failed"] += 1
 
   def on_retry(self, n: int = 1) -> None:
     """``n`` sub-batches re-dispatched by the recovery path (a transient
@@ -187,7 +188,7 @@ class ServeMetrics:
       if h2d_bytes:
         self._counters["h2d_bytes"] += int(h2d_bytes)
       if key is not None:
-        b = self._bucket(key)
+        b = self._bucket_locked(key)
         if host_s is not None:
           b["host"].add(host_s)
           b["host_hist"].add(host_s)
@@ -198,7 +199,7 @@ class ServeMetrics:
   def on_complete(self, key, queue_s: float, service_s: float) -> None:
     with self._lock:
       self._counters["completed"] += 1
-      b = self._bucket(key)
+      b = self._bucket_locked(key)
       b["completed"] += 1
       b["queue"].add(queue_s)
       b["queue_hist"].add(queue_s)

@@ -107,7 +107,7 @@ class ResilienceManager:
     backend, _block, schedule = arm
     return (key, backend, schedule)
 
-  def _get(self, cell) -> CircuitBreaker:
+  def _get_locked(self, cell) -> CircuitBreaker:
     br = self._breakers.get(cell)
     if br is None:
       br = self._breakers[cell] = CircuitBreaker()
@@ -173,7 +173,7 @@ class ResilienceManager:
     if self.threshold is None:
       return None
     with self._lock:
-      br = self._get(self._cell(key, arm))
+      br = self._get_locked(self._cell(key, arm))
       br.consecutive_failures += 1
       if br.state == STATE_HALF_OPEN:
         br.state = STATE_OPEN       # the probe failed: cooldown restarts

@@ -1,4 +1,28 @@
-"""Shared test helpers."""
+"""Shared test helpers + REPRO_SANITIZE=1 hardened mode.
+
+Setting ``REPRO_SANITIZE=1`` in the environment makes the whole test run
+stricter: jax_debug_nans raises at the op that produced a NaN, and the
+repro.analysis pre-flight aborts the session before collection if the tree
+has new static-analysis findings.  Default off — tier-1 behavior is
+unchanged without the variable.
+"""
+
+
+import pytest
+
+_SANITIZE_KEY = pytest.StashKey()
+
+
+def pytest_configure(config):
+  from repro.analysis.sanitize import maybe_enable_sanitize
+  if maybe_enable_sanitize():
+    config.stash[_SANITIZE_KEY] = True
+
+
+def pytest_report_header(config):
+  if config.stash.get(_SANITIZE_KEY, False):
+    return "repro: REPRO_SANITIZE=1 (jax_debug_nans on, analyzer preflight)"
+  return None
 
 
 class FakeClock:

@@ -1,0 +1,41 @@
+"""Tier-1 numeric semiring-law gate (ISSUE: laws checked in the test path,
+not only via the analyzer CLI): every registered ring must satisfy its
+algebra over adversarial floats, and the closure pad tables must be
+invariant under repeated squaring.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import laws
+from repro.core import closure as cl_mod
+from repro.core import semiring as sr_mod
+
+
+@pytest.mark.parametrize("op", sr_mod.ALL_OPS)
+def test_laws_hold(op):
+  failures = laws.check_laws(op)
+  assert failures == [], "\n".join(failures)
+
+
+@pytest.mark.parametrize("op", sr_mod.ALL_OPS)
+def test_closure_pads_invariant(op):
+  failures = laws.check_closure_pads(op)
+  assert failures == [], "\n".join(failures)
+
+
+def test_otimes_identity_registered_for_all_true_semirings():
+  for op in sr_mod.ALL_OPS:
+    sr = sr_mod.get(op)
+    if op == "addnorm":
+      assert sr.otimes_identity is None  # (a-b)² has no identity
+    else:
+      assert sr.otimes_identity is not None, op
+
+
+def test_addnorm_closure_padding_refused():
+  # (x-0)² == x² feeds pad vertices back into the real block after one
+  # squaring, so closure padding is undefined for addnorm — the guard in
+  # closure_pad_values must refuse rather than silently corrupt
+  with pytest.raises(ValueError, match="no ⊗-identity"):
+    cl_mod.closure_pad_values("addnorm")

@@ -601,3 +601,58 @@ def test_future_callback_error_does_not_kill_serving():
 
   ok = eng.submit(apsp_request(graphs.weighted_digraph(12, 0.3, seed=9)))
   assert eng.run_until_idle() == 1 and ok.state == "done"
+
+
+# --- executable-cache thread-safety (repro.analysis lock-discipline fix) ----
+
+
+def test_cache_concurrent_get_or_compile_consistent_accounting():
+  """N threads hammer a handful of keys with a slow build; accounting must
+  balance (hits + compile-losses == calls - executables) and every thread
+  must receive a working executable.  Before the cache grew its lock this
+  raced: concurrent first-misses corrupted the entry dict and the counters.
+  """
+  import threading
+
+  from repro.serve_mmo.cache import ExecutableCache
+
+  cache = ExecutableCache()
+  keys = [("k", i) for i in range(3)]
+  calls_per_thread, n_threads = 8, 6
+  args = (np.zeros((4, 4), np.float32),)
+  errors = []
+  barrier = threading.Barrier(n_threads)
+
+  def make_fn():
+    time.sleep(0.01)  # widen the miss→insert window
+    return lambda x: x + 1
+
+  def worker(seed):
+    rng = np.random.default_rng(seed)
+    barrier.wait()
+    try:
+      for _ in range(calls_per_thread):
+        key = keys[rng.integers(len(keys))]
+        fn = cache.get_or_compile(key, make_fn, args)
+        out = fn(args[0])
+        assert out.shape == (4, 4)
+        cache.stats()  # concurrent reader on the counters
+    except Exception as e:  # noqa: BLE001
+      errors.append(e)
+
+  threads = [threading.Thread(target=worker, args=(s,))
+             for s in range(n_threads)]
+  for t in threads:
+    t.start()
+  for t in threads:
+    t.join()
+  assert errors == []
+  stats = cache.stats()
+  total_calls = calls_per_thread * n_threads
+  assert stats["executables"] == len(keys)
+  # misses counts compile attempts; a loser of a compile race counts as a
+  # miss AND lands on the winner's entry as a hit, so the exact invariant
+  # is hits + inserted executables == total calls
+  assert stats["misses"] >= stats["executables"]
+  assert stats["hits"] + stats["executables"] == total_calls
+  assert len(cache) == len(keys)

@@ -1,0 +1,75 @@
+"""Semiring-aware CSR: seeds validated against the registry, results
+identical to the dense contraction, addnorm refused (no ⊗-annihilator).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import semiring as sr_mod
+from repro.core import sparse
+from repro.core.mmo import mmo
+
+STORABLE = [op for op in sr_mod.ALL_OPS if op != "addnorm"]
+
+
+def _sample(op, rng, shape):
+  sr = sr_mod.get(op)
+  if sr.boolean:
+    return rng.random(shape) < 0.5
+  if op in ("minmul", "maxmul", "maxmin"):
+    return rng.uniform(0.25, 2.0, shape)  # positive operating domain
+  return rng.uniform(-1.0, 1.0, shape)
+
+
+@pytest.mark.parametrize("op", STORABLE)
+def test_csr_seed_validates(op):
+  sparse.validate_csr_seed(op)  # must not raise on the shipped table
+
+
+@pytest.mark.parametrize("op", STORABLE)
+def test_csr_spmm_matches_dense(op):
+  rng = np.random.default_rng(7)
+  sr = sr_mod.get(op)
+  absent = sparse.csr_absent_value(op)
+  a = _sample(op, rng, (6, 8))
+  b = _sample(op, rng, (8, 5))
+  mask = rng.random((6, 8)) < 0.4
+  dt = bool if sr.boolean else np.float64
+  a = np.asarray(a, dt)
+  a[mask] = absent
+  a[3, :] = absent  # one fully-absent row
+  indptr, indices, data = sparse.to_csr(a, op=op)
+  assert len(data) == np.count_nonzero(a != np.asarray(absent, dt))
+  got = sparse.csr_spmm(indptr, indices, data, np.asarray(b, dt), op=op)
+  want = np.asarray(mmo(np.asarray(a, np.float32 if not sr.boolean else bool),
+                        np.asarray(b, np.float32 if not sr.boolean else bool),
+                        op=op))
+  np.testing.assert_allclose(got.astype(np.float64),
+                             want.astype(np.float64), atol=1e-5)
+
+
+def test_addnorm_csr_refused():
+  with pytest.raises(ValueError, match="annihilator"):
+    sparse.to_csr(np.zeros((2, 2)), op="addnorm")
+  with pytest.raises(ValueError, match="annihilator"):
+    sparse.csr_absent_value("addnorm")
+
+
+def test_bad_seed_rejected(monkeypatch):
+  # 1.0 is not absorbed under mma: 1*x contributes x, so dropping it lies
+  monkeypatch.setitem(sparse._ABSENT, "mma", 1.0)
+  with pytest.raises(ValueError, match="not absorbed"):
+    sparse.validate_csr_seed("mma")
+
+
+def test_mma_default_matches_legacy_path():
+  rng = np.random.default_rng(3)
+  a = rng.standard_normal((5, 7))
+  a[rng.random((5, 7)) < 0.5] = 0.0
+  b = rng.standard_normal((7, 4))
+  csr = sparse.to_csr(a)          # default op="mma" — historical behavior
+  # csr_spmm routes ⊗/⊕ through jnp (f32 on hosts without x64): compare at
+  # single precision against the pure-numpy f64 legacy path
+  np.testing.assert_allclose(sparse.csr_spmm_np(*csr, b),
+                             sparse.csr_spmm(*csr, b, op="mma"), atol=1e-5)
