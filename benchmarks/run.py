@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
   Fig 10  microbench_shapes     Fig 13/14  sparse_bench
   Fig 11  apps_bench            Table 5 area_table
   §Roofline  roofline_table (from dry-run artifacts, if present)
-  §Dispatch  dispatch_bench (auto vs fixed backends → BENCH_dispatch.json)
+  §Dispatch  dispatch_bench (auto vs fixed backends, ragged masked-K, and
+             the fused fixpoint megakernel vs per-iteration dispatch →
+             BENCH_dispatch.json)
   §Sharding  shard_bench (local vs distributed schedules → BENCH_shard.json;
              re-execs itself with 8 fake host devices on CPU)
   §QoS       qos_bench (deadline vs FIFO under bulk interference, admission

@@ -38,9 +38,16 @@ def _default_mmo(a, b, c, op, backend, k_valid=None):
 def _changed(new: Array, old: Array) -> Array:
   if new.dtype == jnp.bool_:
     return jnp.any(new != old)
-  # inf-aware compare: inf == inf counts as unchanged.
-  same = (new == old) | (jnp.isinf(new) & jnp.isinf(old) & (jnp.sign(new)
-                                                            == jnp.sign(old)))
+  # inf-aware compare: inf == inf counts as unchanged.  NaN-aware too:
+  # NaN != NaN, so without the isnan term a single NaN-bearing request can
+  # never converge and spins its whole batch to max_iters — a NaN staying
+  # in place is a fixed point like any other value (the validation layer
+  # rejects NaN outputs separately).  The megakernel's in-chip reduction
+  # implements the identical compare.
+  same = ((new == old)
+          | (jnp.isinf(new) & jnp.isinf(old) & (jnp.sign(new)
+                                                == jnp.sign(old)))
+          | (jnp.isnan(new) & jnp.isnan(old)))
   return ~jnp.all(same)
 
 
@@ -59,7 +66,6 @@ def leyzorek_closure(adj: Array,
 
   Returns (closure, iterations_run).
   """
-  sr = sr_mod.get(op)
   n = adj.shape[-1]
   iters = max_iters if max_iters is not None else max(
       1, math.ceil(math.log2(max(n, 2))))
@@ -170,48 +176,91 @@ def _batched_fixpoint(adj: Array, step_fn, max_iters: int,
   return out, iters
 
 
+def _megakernel_fixpoint(adj, *, op, algorithm, max_iters, valid_n,
+                         megakernel_g, interpret):
+  """The fused-arm dispatch target — one import seam for both solvers (and
+  a lazy one: kernels/ must stay importable without closure and vice versa)."""
+  from repro.kernels.closure_megakernel import megakernel_fixpoint
+  return megakernel_fixpoint(adj, op=op, algorithm=algorithm,
+                             max_iters=max_iters, valid_n=valid_n,
+                             g=megakernel_g, interpret=interpret)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("op", "backend", "max_iters", "mmo_fn"))
+    jax.jit,
+    static_argnames=("op", "backend", "max_iters", "mmo_fn",
+                     "fixpoint_backend", "megakernel_g", "interpret"))
 def batched_leyzorek_closure(adj: Array,
                              *,
                              op: str,
                              max_iters: Optional[int] = None,
                              backend: str = "auto",
                              mmo_fn: Optional[Callable] = None,
-                             valid_n: Optional[Array] = None):
+                             valid_n: Optional[Array] = None,
+                             fixpoint_backend: str = "dispatch",
+                             megakernel_g: int = 8,
+                             interpret: Optional[bool] = None):
   """Repeated squaring over a (R, n, n) request stack.
 
   ``valid_n`` (R,) carries each request's true problem size for ragged
   masked-K work skipping.  Returns (closure (R, n, n), per-request iteration
   counts (R,)).
+
+  ``fixpoint_backend="megakernel"`` (or the cost-table spelling
+  ``backend="megakernel"``) runs the whole fixpoint through the fused Pallas
+  megakernel in G-iteration chunks (kernels/closure_megakernel.py) —
+  bit-identical outputs and iteration counts, HBM traffic paid once per
+  ``megakernel_g`` iterations instead of once per squaring.  ``interpret``
+  only applies to that arm (default: interpret off-TPU).
   """
   if adj.ndim < 3:
     raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
   n = adj.shape[-1]
   iters = max_iters if max_iters is not None else max(
       1, math.ceil(math.log2(max(n, 2))))
+  if fixpoint_backend == "megakernel" or backend == "megakernel":
+    return _megakernel_fixpoint(adj, op=op, algorithm="leyzorek",
+                                max_iters=iters, valid_n=valid_n,
+                                megakernel_g=megakernel_g, interpret=interpret)
+  if fixpoint_backend != "dispatch":
+    raise ValueError(f"unknown fixpoint_backend {fixpoint_backend!r}; "
+                     f"one of ('dispatch', 'megakernel')")
   f = mmo_fn or _default_mmo
   return _batched_fixpoint(adj, lambda c, kv: f(c, c, c, op, backend, kv),
                            iters, valid_n=valid_n)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("op", "backend", "max_iters", "mmo_fn"))
+    jax.jit,
+    static_argnames=("op", "backend", "max_iters", "mmo_fn",
+                     "fixpoint_backend", "megakernel_g", "interpret"))
 def batched_bellman_ford_closure(adj: Array,
                                  *,
                                  op: str,
                                  max_iters: Optional[int] = None,
                                  backend: str = "auto",
                                  mmo_fn: Optional[Callable] = None,
-                                 valid_n: Optional[Array] = None):
+                                 valid_n: Optional[Array] = None,
+                                 fixpoint_backend: str = "dispatch",
+                                 megakernel_g: int = 8,
+                                 interpret: Optional[bool] = None):
   """All-pairs Bellman-Ford D ← D ⊕ (D ⊗ A) over a (R, n, n) request stack.
 
-  ``valid_n`` (R,) enables ragged masked-K work skipping (see above).
+  ``valid_n`` (R,) enables ragged masked-K work skipping, and
+  ``fixpoint_backend="megakernel"`` the fused whole-fixpoint arm (see
+  ``batched_leyzorek_closure``).
   """
   if adj.ndim < 3:
     raise ValueError(f"batched closure needs (R, n, n) input, got {adj.shape}")
   n = adj.shape[-1]
   iters = max_iters if max_iters is not None else n
+  if fixpoint_backend == "megakernel" or backend == "megakernel":
+    return _megakernel_fixpoint(adj, op=op, algorithm="bellman_ford",
+                                max_iters=iters, valid_n=valid_n,
+                                megakernel_g=megakernel_g, interpret=interpret)
+  if fixpoint_backend != "dispatch":
+    raise ValueError(f"unknown fixpoint_backend {fixpoint_backend!r}; "
+                     f"one of ('dispatch', 'megakernel')")
   f = mmo_fn or _default_mmo
   return _batched_fixpoint(adj, lambda d, kv: f(d, adj, d, op, backend, kv),
                            iters, valid_n=valid_n)

@@ -237,6 +237,15 @@ def mmo(a: Array,
   defaults".  ``backend='auto'`` fills it from the cost table when the
   caller leaves it unset.
   """
+  if backend == "megakernel":
+    # a cost-table arm, but a whole-fixpoint one: it prices G fused closure
+    # iterations per launch, so there is no single-contraction entry point
+    raise ValueError(
+        "backend 'megakernel' fuses whole closure fixpoints, not single "
+        "contractions — select it via batched_leyzorek_closure / "
+        "batched_bellman_ford_closure(fixpoint_backend='megakernel'), or "
+        "let closure-bucket auto dispatch pick it (tuning.dispatch."
+        "CLOSURE_BACKENDS)")
   sr = sr_mod.get(op)
   _check_shapes(a, b, c)
   if sr.boolean:

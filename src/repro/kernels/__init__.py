@@ -1,4 +1,6 @@
-"""Pallas TPU kernels: generic SIMD² semiring MMO + flash attention."""
+"""Pallas TPU kernels: generic SIMD² semiring MMO, the fused closure
+fixpoint megakernel, and flash attention."""
+from repro.kernels.closure_megakernel import megakernel_fixpoint
 from repro.kernels.ops import flash_attention, semiring_mmo
 
-__all__ = ["flash_attention", "semiring_mmo"]
+__all__ = ["flash_attention", "megakernel_fixpoint", "semiring_mmo"]

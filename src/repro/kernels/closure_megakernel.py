@@ -1,0 +1,315 @@
+"""Fused Pallas closure megakernel — G fixpoint iterations per launch.
+
+``_batched_fixpoint`` (core/closure.py) runs one device program per squaring
+step: every iteration round-trips the whole (R, n, n) iterate through HBM and
+re-reads it for the next contraction.  The TCU computational model
+(arXiv:1908.06649) says exactly this off-chip traffic — not FLOPs — bounds
+iterative matrix algorithms, so this kernel keeps each request's iterate
+resident in VMEM and runs **G whole iterations per grid visit**:
+
+  * grid = (requests, G, output row-blocks); the request dim is parallel
+    (Megacore splits it), the iteration and block dims are sequential.
+  * the output ref doubles as the on-chip iterate: initialized from the
+    incoming stack at (g == 0, i == 0), updated in place each iteration, and
+    flushed to HBM once per request — HBM traffic is paid once per G
+    iterations instead of once per iteration.
+  * per-request ``k_valid``/live-n, the incoming active flags, iteration
+    counters, and the chunk's live-step budget are **scalar-prefetched**
+    (the ragged-attention idiom): available before the body runs, so a
+    frozen request's grid steps skip all contraction work via ``pl.when``
+    without any host observation.
+  * the per-request convergence reduction — ``_changed``'s inf-aware (and
+    NaN-aware) compare — runs in-kernel on the last block of each iteration
+    and lands in an output flag vector the host driver folds back into the
+    surrounding ``lax.while_loop``.
+  * a ``pl.CostEstimate`` tells XLA the launch covers R·G contractions'
+    worth of flops over one chunk's worth of HBM bytes, so it schedules the
+    fused program sanely instead of assuming one-matmul cost.
+
+Why G-iteration chunks instead of unrolling the whole fixpoint on-chip: the
+iterate must stay fully VMEM-resident (each iteration reads every row of the
+previous one), which caps n, and worst-case trip counts (n−1 for
+Bellman-Ford) would force a worst-case-sized launch even though most batches
+converge early.  Chunking keeps the early-exit: the host ``while_loop`` asks
+for at most G more iterations, re-checks ``any(active)``, and stops — frozen
+requests inside a chunk cost one scalar test per grid step.
+
+Bit-parity contract: outputs *and* per-request iteration counts match
+``_batched_fixpoint`` exactly for every ring with a ⊗-identity (the parity
+suite in tests/test_closure_megakernel.py pins this in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import closure as cl_mod
+from repro.core import semiring as sr_mod
+from repro.kernels.semiring_mmo import (_CompilerParams, _float_ring, _rup,
+                                        _SUBLANES)
+
+Array = jax.Array
+
+DEFAULT_G = 8  # chunk length: fixpoint iterations fused per kernel launch
+
+
+def _slab_contract(sr: sr_mod.Semiring, a_slab: Array, b_full: Array,
+                   kv, acc_dtype) -> Array:
+  """One (bm, K) × (K, N) row-slab contraction against the full resident
+  iterate.  K is never split across grid steps (the whole matrix is already
+  in VMEM), so mma keeps the reference's single-dot summation order — the
+  bit-parity contract with the per-iteration path.
+
+  ``kv`` (traced int32) bounds the VPU rank-u sliver loop: lanes at or
+  beyond a request's live-n are isolated-vertex padding whose ⊗ terms are
+  ⊕-identity no-ops, so min/max rings skip them (exact algebra — dropping
+  exact no-ops cannot move a min/max).  The MXU path ignores the hint, like
+  the per-contraction kernel: full padded K on the MXU is already cheap.
+  """
+  if sr.name == "mma":
+    return jnp.dot(a_slab, b_full, preferred_element_type=jnp.float32)
+
+  oplus, otimes = _float_ring(sr)
+  bm, kp = a_slab.shape
+  bn = b_full.shape[1]
+  u = min(_SUBLANES, kp)
+
+  def sliver(j):
+    a_s = jax.lax.dynamic_slice(a_slab, (0, j * u), (bm, u)).astype(acc_dtype)
+    b_s = jax.lax.dynamic_slice(b_full, (j * u, 0), (u, bn)).astype(acc_dtype)
+    prod = otimes(a_s[:, :, None], b_s[None, :, :])  # (bm, u, bn)
+    part = prod[:, 0, :]
+    for t in range(1, u):  # u is tiny & static: unrolled ⊕-tree
+      part = oplus(part, prod[:, t, :])
+    return part
+
+  # sliver 0 always runs: every live request has kv >= 1
+  acc = sliver(0)
+  nlive = (kv + u - 1) // u  # live slivers — the ragged masked-K trip count
+
+  def body(j, acc):
+    return oplus(acc, sliver(j))
+
+  return jax.lax.fori_loop(1, nlive, body, acc)
+
+
+def _make_fixpoint_kernel(sr: sr_mod.Semiring, acc_dtype, nblk: int, bm: int,
+                          has_adj: bool):
+  """Kernel factory; ``has_adj`` selects Bellman-Ford (D ← D ⊕ (D ⊗ A),
+  constant second operand) vs repeated squaring (C ← C ⊕ (C ⊗ C))."""
+  oplus, _ = _float_ring(sr)
+  boolean = sr.boolean
+
+  def fixpoint_kernel(kv_ref, act0_ref, it0_ref, glim_ref, *refs):
+    # scalar-prefetch refs first (SMEM, whole vectors, indexable by request)
+    if has_adj:
+      c_ref, adj_ref = refs[0], refs[1]
+      o_ref, it_ref, act_ref, new_ref = refs[2], refs[3], refs[4], refs[5]
+    else:
+      c_ref, adj_ref = refs[0], None
+      o_ref, it_ref, act_ref, new_ref = refs[1], refs[2], refs[3], refs[4]
+
+    r = pl.program_id(0)
+    g = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when((g == 0) & (i == 0))
+    def _init():
+      # seed the VMEM-resident iterate + per-request flags for this request
+      o_ref[0] = c_ref[0].astype(acc_dtype)
+      it_ref[0, 0] = it0_ref[r]
+      act_ref[0, 0] = act0_ref[r]
+
+    # frozen requests (and steps past the chunk's live budget) skip every
+    # contraction — one scalar test per grid step, no host round-trip
+    live = (act_ref[0, 0] != 0) & (g < glim_ref[0])
+
+    @pl.when(live)
+    def _compute():
+      old_slab = o_ref[0, pl.ds(i * bm, bm), :]
+      b_full = adj_ref[0] if has_adj else o_ref[0]
+      part = _slab_contract(sr, old_slab, b_full, kv_ref[r], acc_dtype)
+      new_ref[pl.ds(i * bm, bm), :] = oplus(part, old_slab)
+
+    @pl.when(live & (i == nblk - 1))
+    def _commit():
+      # all row slabs of this iteration are in scratch; run the convergence
+      # reduction (inf- and NaN-aware, matching core.closure._changed) and
+      # advance the iterate + flags in place
+      old = o_ref[0]
+      new = new_ref[...]
+      if boolean:
+        same = new == old  # float {0,1} domain — plain equality is exact
+      else:
+        same = ((new == old)
+                | (jnp.isinf(new) & jnp.isinf(old)
+                   & (jnp.sign(new) == jnp.sign(old)))
+                | (jnp.isnan(new) & jnp.isnan(old)))
+      ndiff = jnp.sum(jnp.logical_not(same).astype(jnp.int32))
+      o_ref[0] = new
+      it_ref[0, 0] = it_ref[0, 0] + 1
+      act_ref[0, 0] = (ndiff > 0).astype(jnp.int32)
+
+  return fixpoint_kernel
+
+
+def _chunk_call(c: Array, adj: Optional[Array], kv: Array, act: Array,
+                it: Array, glim: Array, *, op: str, g_steps: int, bm: int,
+                interpret: bool):
+  """One megakernel launch: up to ``g_steps`` fixpoint iterations on-chip.
+
+  Returns (iterate, iteration counters, active flags) — the pieces the host
+  ``while_loop`` carries between chunks.
+  """
+  sr = sr_mod.get(op)
+  acc_dtype = c.dtype
+  r, np_ = c.shape[0], c.shape[-1]
+  nblk = np_ // bm
+  has_adj = adj is not None
+  kernel = _make_fixpoint_kernel(sr, acc_dtype, nblk, bm, has_adj)
+
+  def mat_spec():
+    return pl.BlockSpec((1, np_, np_), lambda rr, gg, ii, *_: (rr, 0, 0))
+
+  def flag_spec():
+    return pl.BlockSpec((1, 1), lambda rr, gg, ii, *_: (rr, 0))
+
+  in_specs = [mat_spec()]
+  operands = [c]
+  if has_adj:
+    in_specs.append(mat_spec())
+    operands.append(adj)
+
+  itemsize = jnp.dtype(acc_dtype).itemsize
+  # the whole point of the fusion: HBM traffic is one chunk's worth (read
+  # the stack once, write it once, plus the constant A for Bellman-Ford),
+  # while the flops cover all R·G contractions run from VMEM
+  cost = pl.CostEstimate(
+      flops=2 * r * g_steps * np_ * np_ * np_,
+      bytes_accessed=itemsize * r * np_ * np_ * (2 + int(has_adj)),
+      transcendentals=0,
+  )
+
+  out, it_out, act_out = pl.pallas_call(
+      kernel,
+      grid_spec=pltpu.PrefetchScalarGridSpec(
+          num_scalar_prefetch=4,
+          grid=(r, g_steps, nblk),
+          in_specs=in_specs,
+          out_specs=[mat_spec(), flag_spec(), flag_spec()],
+          scratch_shapes=[pltpu.VMEM((np_, np_), acc_dtype)],
+      ),
+      out_shape=[
+          jax.ShapeDtypeStruct((r, np_, np_), acc_dtype),
+          jax.ShapeDtypeStruct((r, 1), jnp.int32),
+          jax.ShapeDtypeStruct((r, 1), jnp.int32),
+      ],
+      compiler_params=_CompilerParams(
+          dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+      cost_estimate=cost,
+      interpret=interpret,
+      name=f"simd2_fixpoint_{sr.name}",
+  )(kv, act, it, glim, *operands)
+  return out, it_out[:, 0], act_out[:, 0]
+
+
+def _pad_closure(x: Array, np_: int, missing, self_value) -> Array:
+  """Embed (R, n, n) into (R, np_, np_) as isolated vertices — the same
+  stable-under-closure padding the serving bucketer uses, so the in-kernel
+  convergence compare over the padded region never flips a flag."""
+  r, n = x.shape[0], x.shape[-1]
+  if np_ == n:
+    return x
+  out = jnp.full((r, np_, np_), jnp.asarray(missing, x.dtype), x.dtype)
+  out = out.at[:, :n, :n].set(x)
+  diag = jnp.arange(n, np_)
+  return out.at[:, diag, diag].set(jnp.asarray(self_value, x.dtype))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("op", "algorithm", "max_iters", "g", "bm", "interpret"))
+def megakernel_fixpoint(adj: Array,
+                        *,
+                        op: str,
+                        algorithm: str = "leyzorek",
+                        max_iters: Optional[int] = None,
+                        valid_n: Optional[Array] = None,
+                        g: int = DEFAULT_G,
+                        bm: int = 128,
+                        interpret: Optional[bool] = None):
+  """Whole-fixpoint driver: ``lax.while_loop`` over G-iteration megakernel
+  chunks.  Drop-in replacement for ``core.closure._batched_fixpoint`` —
+  same (closure, per-request iteration counts) contract, bit-identical
+  results (the per-chunk live budget ``min(g, max_iters − i)`` keeps the
+  ``max_iters`` cap exact even when G doesn't divide the trip count).
+  """
+  if adj.ndim != 3:
+    raise ValueError(f"megakernel fixpoint needs (R, n, n) input, "
+                     f"got {adj.shape}")
+  if algorithm not in ("leyzorek", "bellman_ford"):
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+  if g < 1:
+    raise ValueError(f"chunk length g must be >= 1, got {g}")
+  sr = sr_mod.get(op)
+  # rings without a ⊗-identity (addnorm) cannot embed isolated vertices —
+  # closure is refused exactly like the per-iteration path refuses it
+  missing, self_value = cl_mod.closure_pad_values(op)
+
+  r, n = adj.shape[0], adj.shape[-1]
+  if max_iters is not None:
+    iters = max_iters
+  elif algorithm == "bellman_ford":
+    iters = n
+  else:
+    import math
+    iters = max(1, math.ceil(math.log2(max(n, 2))))
+
+  interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+
+  was_bool = sr.boolean
+  x = adj.astype(jnp.float32) if was_bool else adj
+  if was_bool:
+    missing, self_value = float(missing), float(self_value)
+  acc_dtype = jnp.float32 if (sr.name == "mma" or was_bool) else (
+      sr.acc_dtype(x.dtype))
+
+  # lane/sublane-aligned padding; interpret mode keeps it minimal so the
+  # CPU parity suite stays cheap
+  bm_ = min(bm, _rup(n, 8 if interp else 128))
+  np_ = _rup(n, bm_)
+  c0 = _pad_closure(x.astype(acc_dtype), np_, missing, self_value)
+  adj_operand = c0 if algorithm == "bellman_ford" else None
+
+  if valid_n is None:
+    kv = jnp.full((r,), n, jnp.int32)
+  else:
+    kv = jnp.asarray(valid_n, jnp.int32)
+
+  g_steps = min(g, iters)
+
+  def cond(state):
+    _, active, _, i = state
+    return jnp.any(active) & (i < iters)
+
+  def body(state):
+    c, active, it, i = state
+    glim = jnp.minimum(jnp.asarray(g_steps, jnp.int32),
+                       jnp.asarray(iters, jnp.int32) - i)
+    c2, it2, act2 = _chunk_call(
+        c, adj_operand, kv, active.astype(jnp.int32), it, glim.reshape(1),
+        op=op, g_steps=g_steps, bm=bm_, interpret=interp)
+    return c2, act2 > 0, it2, i + glim
+
+  state0 = (c0, jnp.ones((r,), jnp.bool_), jnp.zeros((r,), jnp.int32),
+            jnp.asarray(0, jnp.int32))
+  out, _, iters_run, _ = jax.lax.while_loop(cond, body, state0)
+  out = out[:, :n, :n]
+  if was_bool:
+    out = out > 0.5
+  return out, iters_run

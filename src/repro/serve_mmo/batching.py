@@ -179,13 +179,17 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
     if sharded:
       # whole-solver entry point: for dp each device runs an *independent*
       # fixpoint over its own requests (straggler decoupling); for the
-      # contraction schedules it swaps the squaring step for the mesh one
+      # contraction schedules it swaps the squaring step for the mesh one.
+      # The fused megakernel is a single-device program — a megakernel
+      # decision on a mesh-routed bucket degrades to the xla shard-local
+      # contraction rather than failing the batch.
+      local_bk = "xla" if backend == "megakernel" else backend
 
       def fn(adj, valid):
         return dist.sharded_closure_batched(adj, op=key.op,
                                             algorithm=algorithm, mesh=mesh,
                                             schedule=schedule,
-                                            backend=backend, block=block,
+                                            backend=local_bk, block=block,
                                             interpret=interpret,
                                             valid_n=valid)
 
@@ -193,6 +197,17 @@ def make_batch_fn(key: BucketKey, *, backend: str, block: tuple = (),
 
     solver = (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
               else cl_mod.batched_bellman_ford_closure)
+
+    if backend == "megakernel":
+      # fused fixpoint: the whole G-iteration chunk runs on-chip; the
+      # dispatch cfg is the chunk length G (cost_table DEFAULT_CONFIGS)
+      g = int(block[0]) if block else 8
+
+      def fn(adj, valid):
+        return solver(adj, op=key.op, fixpoint_backend="megakernel",
+                      megakernel_g=g, interpret=interpret, valid_n=valid)
+
+      return fn
 
     def mmo_fn(a, b, c, op, bk, k_valid=None):
       from repro.core.mmo import mmo as _mmo

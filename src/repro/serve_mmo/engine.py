@@ -402,8 +402,14 @@ class MMOEngine:
         else:
           from repro.tuning import dispatch as _dispatch
           m, k, n = contract_shape(key)
+          # closure buckets own a whole fixpoint, so the fused 'megakernel'
+          # arm competes for them (and only them: a single-contraction
+          # bucket can't run it).  The choice flows into _exec_key via the
+          # (backend, block) slots, so cached executables stay distinct.
+          pool = (_dispatch.CLOSURE_BACKENDS if key.kind == "closure"
+                  else None)
           d = _dispatch.resolve(key.op, m, k, n, key.dtypes[0],
-                                table=self.cost_table)
+                                table=self.cost_table, backends=pool)
           dec = (d.backend, d.cfg)
         self._decisions[key] = dec
       return dec

@@ -11,8 +11,8 @@ analogue of that choice for our three backends:
   dispatch   — the brain of ``backend="auto"``: per call signature, return
                the cheapest (backend, block config) the table knows about.
 """
-from repro.tuning.cost_table import (CostEntry, CostTable, Decision,
-                                     DEFAULT_CONFIGS, SCHEDULE_ARMS,
+from repro.tuning.cost_table import (CLOSURE_BACKENDS, CostEntry, CostTable,
+                                     Decision, DEFAULT_CONFIGS, SCHEDULE_ARMS,
                                      SCHEMA_VERSION, prior_seconds,
                                      sharded_prior_seconds, signature)
 from repro.tuning.autotune import tune, tune_for_requests, tune_mesh
@@ -21,6 +21,7 @@ from repro.tuning.dispatch import (clear_cost_table, contraction_seconds,
                                    use_cost_table)
 
 __all__ = [
+    "CLOSURE_BACKENDS",
     "CostEntry", "CostTable", "Decision", "DEFAULT_CONFIGS", "SCHEDULE_ARMS",
     "SCHEMA_VERSION", "prior_seconds", "sharded_prior_seconds", "signature",
     "tune", "tune_for_requests", "tune_mesh", "clear_cost_table",

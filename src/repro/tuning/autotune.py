@@ -38,7 +38,14 @@ from repro.tuning.cost_table import (SCHEDULE_ARMS, CostTable,
 
 DEFAULT_OPS = ("mma", "minplus", "maxmin", "maxmul", "orand", "addnorm")
 DEFAULT_SHAPES = ((64, 64, 64), (128, 128, 128), (64, 256, 64))
-DEFAULT_BACKENDS = ("xla", "vector", "pallas")
+DEFAULT_BACKENDS = ("xla", "vector", "pallas", "megakernel")
+
+
+def _megakernel_point_ok(op: str, shape) -> bool:
+  """The fused-fixpoint arm only exists for closure-shaped points: square
+  contractions on rings with a ⊗-identity (closure is refused elsewhere)."""
+  m, k, n = bucket_shape(shape)
+  return m == k == n and sr_mod.get(op).otimes_identity is not None
 
 
 def _device_label() -> str:
@@ -84,14 +91,58 @@ def measure_point(op: str, shape, dtype, backend: str, cfg: tuple, *,
   return best
 
 
+def measure_megakernel_point(op: str, shape, dtype, cfg: tuple, *,
+                             iters: int = 3, warmup: int = 1) -> float:
+  """Best-of wall seconds *per fused iteration* for one megakernel row.
+
+  The table prices every backend in per-contraction units, so the fused
+  arm is timed as one G-iteration chunk and divided by G.  The operand is
+  a directed line graph — the slowest-converging closure input — with
+  ``max_iters=G`` so the kernel runs exactly its chunk and never exits
+  early: what we record is the steady-state fused iteration cost, not a
+  lucky early convergence."""
+  import jax
+  import jax.numpy as jnp
+  from repro.core.closure import batched_bellman_ford_closure
+
+  m, k, n = bucket_shape(shape)
+  assert m == k == n, "megakernel rows are square closure points"
+  g = int(cfg[0]) if cfg else 8
+  sr = sr_mod.get(op)
+  rng = np.random.default_rng(0)
+  if sr.boolean:
+    adj_h = np.zeros((n, n), dtype=bool)
+    adj_h[np.arange(n - 1), np.arange(1, n)] = True
+  else:
+    adj_h = np.full((n, n), sr.oplus_identity, dtype=dtype)
+    np.fill_diagonal(adj_h, sr.otimes_identity)
+    adj_h[np.arange(n - 1), np.arange(1, n)] = np.abs(
+        np.tanh(rng.standard_normal(n - 1))).astype(dtype)
+  adj = jnp.asarray(adj_h)[None]
+  def run():
+    out, _ = batched_bellman_ford_closure(
+        adj, op=op, fixpoint_backend="megakernel", megakernel_g=g,
+        max_iters=g)
+    return out
+  for _ in range(warmup):
+    jax.block_until_ready(run())
+  best = float("inf")
+  for _ in range(iters):
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    best = min(best, time.perf_counter() - t0)
+  return best / g
+
+
 def default_backends() -> tuple:
-  """Measurement-worthy backends for this host: Pallas is only a serving
-  option on TPU — on CPU it runs in interpret mode, orders of magnitude
-  slower, and measuring it would stall warmup for no dispatchable gain.
-  (``--dry-prior`` sweeps still cover it: priors cost nothing.)"""
+  """Measurement-worthy backends for this host: Pallas (and the megakernel,
+  which is Pallas underneath) is only a serving option on TPU — on CPU it
+  runs in interpret mode, orders of magnitude slower, and measuring it
+  would stall warmup for no dispatchable gain.  (``--dry-prior`` sweeps
+  still cover both: priors cost nothing.)"""
   import jax
   return ("xla", "vector") + (
-      ("pallas",) if jax.default_backend() == "tpu" else ())
+      ("pallas", "megakernel") if jax.default_backend() == "tpu" else ())
 
 
 def tune(*,
@@ -121,6 +172,8 @@ def tune(*,
     for shape in shapes:
       for dtype in op_dtypes:
         for backend in backends:
+          if backend == "megakernel" and not _megakernel_point_ok(op, shape):
+            continue  # closure undefined here: no row, prior or measured
           for cfg in configs.get(backend, ((),)):
             if fill_prior:
               table.record(op, shape, dtype, backend, cfg,
@@ -128,8 +181,12 @@ def tune(*,
                            source="prior")
             if dry_prior:
               continue
-            seconds = measure_point(op, shape, dtype, backend, cfg,
-                                    iters=iters, warmup=warmup)
+            if backend == "megakernel":
+              seconds = measure_megakernel_point(op, shape, dtype, cfg,
+                                                 iters=iters, warmup=warmup)
+            else:
+              seconds = measure_point(op, shape, dtype, backend, cfg,
+                                      iters=iters, warmup=warmup)
             table.record(op, shape, dtype, backend, cfg, seconds,
                          source="measured")
             if verbose:

@@ -38,14 +38,24 @@ MIN_BUCKET = 8  # canonical bucket floor; serve_mmo.scheduler re-exports it
 
 # Candidate block configs swept per backend: 'pallas' tunes the (bm, bn, bk)
 # tile, 'vector'/'xla' tune the K block of the blocked broadcast-reduce
-# (irrelevant for MXU-rewritten ops, which ignore it).
+# (irrelevant for MXU-rewritten ops, which ignore it), 'megakernel' tunes the
+# fused chunk length G (fixpoint iterations per kernel launch).
 DEFAULT_CONFIGS = {
     "vector": ((128,), (512,)),
     "xla": ((512,),),
     "pallas": ((128, 128, 128), (128, 128, 256), (256, 128, 128)),
+    "megakernel": ((2,), (4,), (8,)),
 }
 
-# Per-grid-step launch/pipeline overhead charged to the Pallas arm.
+# The backend pool closure buckets dispatch over: the per-contraction arms
+# plus the fused whole-fixpoint megakernel (kernels/closure_megakernel.py).
+# ``best``'s default order deliberately EXCLUDES 'megakernel' — a single
+# mmo call can't run a fused fixpoint, so plain contraction dispatch must
+# never pick it; only callers that own a whole closure loop (the serving
+# engine's closure buckets, the batched solvers) pass this pool explicitly.
+CLOSURE_BACKENDS = ("xla", "vector", "pallas", "megakernel")
+
+# Per-grid-step launch/pipeline overhead charged to the Pallas arms.
 _PALLAS_STEP_OVERHEAD_S = 1e-7
 
 
@@ -112,7 +122,7 @@ def _local_point_seconds(sr, m: int, k: int, n: int, itemsize: int,
 
   if backend == "xla":
     on_mxu = sr.mxu_rewrite is not None
-  elif backend == "pallas":
+  elif backend in ("pallas", "megakernel"):
     on_mxu = sr.name in ("mma", "addnorm")  # in-kernel MXU rewrites
   else:  # 'vector'
     on_mxu = False
@@ -122,6 +132,19 @@ def _local_point_seconds(sr, m: int, k: int, n: int, itemsize: int,
   else:
     t_comp = flops * hw.vpu_hazard(sr.name) / (
         hw.PEAK_FLOPS_BF16 * hw.VPU_RATIO)
+
+  if backend == "megakernel":
+    # fused whole-fixpoint arm: the iterate stays VMEM-resident across the
+    # chunk, so the table's one-contraction unit pays the HBM round-trip
+    # only once per G iterations — compute-bound contractions price the
+    # same as pallas, bandwidth-bound ones price ~G× cheaper, which is the
+    # whole reason the arm exists (TCU model: off-chip traffic bounds
+    # iterative matrix algorithms, not FLOPs)
+    g = int(cfg[0]) if cfg else 8
+    t = max(t_comp, t_mem / max(g, 1))
+    # one grid step per output row-block per iteration, request dim amortized
+    t += math.ceil(m / 128) * _PALLAS_STEP_OVERHEAD_S
+    return t
 
   t = max(t_comp, t_mem)
   if backend == "pallas":

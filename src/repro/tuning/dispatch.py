@@ -20,11 +20,19 @@ import os
 import threading
 from typing import Optional, Sequence, Union
 
-from repro.tuning.cost_table import (SCHEDULE_ARMS, CostTable, Decision,
-                                     prior_seconds, sharded_prior_seconds)
+from repro.tuning.cost_table import (CLOSURE_BACKENDS, SCHEDULE_ARMS,
+                                     CostTable, Decision, prior_seconds,
+                                     sharded_prior_seconds)
 
 ENV_VAR = "REPRO_COST_TABLE"
 DEFAULT_BACKEND = "xla"
+
+# CLOSURE_BACKENDS (re-exported above) is the pool for dispatchers that own
+# a whole closure fixpoint (the serving engine's closure buckets): the
+# per-contraction arms plus the fused 'megakernel' arm, whose cfg is the
+# chunk length G.  ``resolve`` with its default ``backends`` never returns
+# 'megakernel' — a single mmo call can't run a fused fixpoint — so the arm
+# only competes where a caller passes this pool explicitly.
 
 _lock = threading.Lock()
 _table: Optional[CostTable] = None

@@ -1,0 +1,246 @@
+"""Parity suite for the fused Pallas closure megakernel.
+
+The megakernel's contract is *bit-identity* with the per-iteration
+``_batched_fixpoint`` path — outputs AND per-request iteration counts —
+for every ring with a ⊗-identity, under ragged ``valid_n``, mixed
+convergence speeds, and chunk lengths that do not divide the trip count.
+Everything here runs the kernel in interpret mode (CPU CI); on TPU the
+same calls compile to the real fused program.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import closure as cl_mod
+from repro.core import semiring as sr_mod
+
+IDENTITY_RINGS = tuple(op for op in sr_mod.ALL_OPS
+                       if sr_mod.get(op).otimes_identity is not None)
+
+
+def _rand_adj(op, n, r, seed=0):
+  """Random prepared (R, n, n) adjacency stack in ring ``op``'s conventions."""
+  sr = sr_mod.get(op)
+  rng = np.random.default_rng(seed)
+  missing, _ = cl_mod.closure_pad_values(op)
+  if sr.boolean:
+    w = rng.random((r, n, n)) > 0.6
+  else:
+    w = rng.uniform(0.2, 1.5, (r, n, n)).astype(np.float32)
+    if op == "mma":
+      # strictly upper-triangular (nilpotent): the mma closure terminates
+      # exactly instead of growing without bound
+      w = np.triu(0.1 * w, k=1).astype(np.float32)
+    keep = rng.random((r, n, n)) > 0.5
+    w = np.where(keep, w, np.float32(missing)).astype(np.float32)
+  return cl_mod.prepare_adjacency(jnp.asarray(w), op=op)
+
+
+def _assert_parity(op, algorithm, adj, *, valid_n=None, g=3, max_iters=None):
+  """Reference vs megakernel: outputs and iteration counts bit-identical."""
+  solver = (cl_mod.batched_leyzorek_closure if algorithm == "leyzorek"
+            else cl_mod.batched_bellman_ford_closure)
+  ref_out, ref_it = solver(adj, op=op, backend="xla", valid_n=valid_n,
+                           max_iters=max_iters)
+  mk_out, mk_it = solver(adj, op=op, fixpoint_backend="megakernel",
+                         megakernel_g=g, valid_n=valid_n,
+                         max_iters=max_iters, interpret=True)
+  np.testing.assert_array_equal(np.asarray(mk_out), np.asarray(ref_out))
+  np.testing.assert_array_equal(np.asarray(mk_it), np.asarray(ref_it))
+  return np.asarray(ref_it)
+
+
+@pytest.mark.parametrize("algorithm", ("leyzorek", "bellman_ford"))
+@pytest.mark.parametrize("op", IDENTITY_RINGS)
+def test_parity_all_rings(op, algorithm):
+  adj = _rand_adj(op, 12, 2, seed=hash(op) % 1000)
+  _assert_parity(op, algorithm, adj, g=3)
+
+
+def _line_graph(n, seed=0):
+  rng = np.random.default_rng(seed)
+  w = np.full((n, n), np.inf, np.float32)
+  w[np.arange(n - 1), np.arange(1, n)] = rng.uniform(
+      0.5, 1.5, n - 1).astype(np.float32)
+  return w
+
+
+def test_parity_ragged_valid_n():
+  """Mixed true sizes inside one padded bucket: the kernel's scalar-
+  prefetched per-request live-n must reproduce the reference's masked-K
+  semantics exactly."""
+  nb = 16
+  sizes = (9, 11, 16)
+  prepared = [cl_mod.prepare_adjacency(jnp.asarray(_line_graph(n, seed=n)),
+                                       op="minplus") for n in sizes]
+  stack = jnp.stack([jnp.asarray(cl_mod.pad_adjacency(p, nb, op="minplus"))
+                     for p in prepared])
+  valid = jnp.asarray(sizes, jnp.int32)
+  for algorithm in ("leyzorek", "bellman_ford"):
+    _assert_parity("minplus", algorithm, stack, valid_n=valid, g=4)
+
+
+def test_parity_converged_slot_freezes():
+  """An already-closed request co-batched with a straggler: both paths must
+  stop its counter at 1 (the probe iteration that detects no change) while
+  the straggler keeps iterating.  Unit edge weights keep every path sum
+  exactly representable, so the closure is a bit-stable fixpoint (random
+  float weights re-associate by one ulp under a different hop split)."""
+  n = 10
+  w = np.full((n, n), np.inf, np.float32)
+  w[np.arange(n - 1), np.arange(1, n)] = 1.0
+  line = cl_mod.prepare_adjacency(jnp.asarray(w), op="minplus")
+  closed, _ = cl_mod.batched_bellman_ford_closure(line[None], op="minplus",
+                                                  backend="xla")
+  stack = jnp.concatenate([closed, line[None]])
+  it = _assert_parity("minplus", "bellman_ford", stack, g=4)
+  assert it[0] == 1
+  assert it[1] > it[0]
+
+
+@pytest.mark.parametrize("g", (1, 3, 4, 7, 64))
+def test_parity_g_not_dividing_trip_count(g):
+  """A line graph's Bellman-Ford runs ~n iterations; sweep chunk lengths
+  that undershoot, straddle, and overshoot it — the per-chunk live budget
+  must keep the max_iters cap and the counters exact."""
+  n = 10
+  adj = cl_mod.prepare_adjacency(jnp.asarray(_line_graph(n)),
+                                 op="minplus")[None]
+  it = _assert_parity("minplus", "bellman_ford", adj, g=g)
+  # diameter n−1: the last change lands on step n−2, the no-change probe
+  # that freezes the request is step n−1 — one short of the max_iters cap
+  assert it[0] == n - 1
+
+
+def test_parity_max_iters_cap():
+  """max_iters smaller than the natural trip count: both paths stop at the
+  cap, even when G does not divide it."""
+  n = 12
+  adj = cl_mod.prepare_adjacency(jnp.asarray(_line_graph(n)),
+                                 op="minplus")[None]
+  it = _assert_parity("minplus", "bellman_ford", adj, g=5, max_iters=7)
+  assert it[0] == 7
+
+
+def test_nan_aware_changed_regression():
+  """A NaN edge weight used to spin the fixpoint to max_iters: NaN != NaN
+  made ``_changed`` report progress forever.  After the fix, NaN cells
+  compare equal to themselves and the request converges normally — and the
+  megakernel's in-kernel reduction agrees bit-for-bit."""
+  n = 8
+  w = _line_graph(n)
+  w[0, 1] = np.nan
+  adj = cl_mod.prepare_adjacency(jnp.asarray(w), op="minplus")[None]
+  ref_out, ref_it = cl_mod.batched_bellman_ford_closure(adj, op="minplus",
+                                                        backend="xla")
+  assert int(ref_it[0]) < n, "NaN request must converge before the cap"
+  assert np.isnan(np.asarray(ref_out)).any()
+  _assert_parity("minplus", "bellman_ford", adj, g=3)
+
+
+def test_backend_alias_routes_to_megakernel():
+  """backend='megakernel' (the cost-table spelling) and
+  fixpoint_backend='megakernel' are the same arm."""
+  adj = _rand_adj("minplus", 8, 2, seed=3)
+  a_out, a_it = cl_mod.batched_leyzorek_closure(
+      adj, op="minplus", backend="megakernel", interpret=True)
+  b_out, b_it = cl_mod.batched_leyzorek_closure(
+      adj, op="minplus", fixpoint_backend="megakernel", interpret=True)
+  np.testing.assert_array_equal(np.asarray(a_out), np.asarray(b_out))
+  np.testing.assert_array_equal(np.asarray(a_it), np.asarray(b_it))
+
+
+def test_addnorm_refused():
+  adj = jnp.zeros((1, 8, 8), jnp.float32)
+  with pytest.raises(ValueError, match="⊗-identity"):
+    cl_mod.batched_leyzorek_closure(adj, op="addnorm",
+                                    fixpoint_backend="megakernel",
+                                    interpret=True)
+
+
+def test_unknown_fixpoint_backend_refused():
+  adj = jnp.zeros((1, 8, 8), jnp.float32)
+  with pytest.raises(ValueError, match="fixpoint_backend"):
+    cl_mod.batched_leyzorek_closure(adj, op="minplus",
+                                    fixpoint_backend="nope")
+
+
+def test_mmo_refuses_megakernel_backend():
+  """A single contraction cannot run a fused fixpoint — mmo points callers
+  at the closure entry points instead of silently falling back."""
+  from repro.core.mmo import mmo
+  a = jnp.zeros((8, 8), jnp.float32)
+  with pytest.raises(ValueError, match="megakernel"):
+    mmo(a, a, op="minplus", backend="megakernel")
+
+
+# ---------------------------------------------------------------------------
+# dispatch containment: the megakernel arm competes only where a closure-
+# owning dispatcher opts in
+# ---------------------------------------------------------------------------
+
+
+def test_cost_table_prior_amortizes_bandwidth():
+  """For a bandwidth-bound point the fused arm's prior divides the HBM term
+  by G, so at G=8 it must undercut the per-iteration pallas prior."""
+  from repro.tuning import prior_seconds
+  shape = (64, 64, 64)
+  pal = prior_seconds("minplus", shape, "float32", "pallas", (128,))
+  mk8 = prior_seconds("minplus", shape, "float32", "megakernel", (8,))
+  assert mk8 < pal
+
+
+def test_best_default_order_excludes_megakernel():
+  from repro.tuning import CLOSURE_BACKENDS, CostTable
+  table = CostTable(device="test")
+  shape = (16, 16, 16)
+  table.record("minplus", shape, "float32", "xla", (), 1.0)
+  table.record("minplus", shape, "float32", "megakernel", (8,), 1e-9)
+  d = table.best("minplus", shape, "float32")
+  assert d.backend == "xla", "default pool must never surface megakernel"
+  d = table.best("minplus", shape, "float32", backends=CLOSURE_BACKENDS)
+  assert d.backend == "megakernel" and d.cfg == (8,)
+
+
+def test_engine_routes_closure_bucket_to_megakernel():
+  """End to end: a cost table that says the fused arm wins a closure bucket
+  → resolve_backend picks it for closure only → the batch executes through
+  the megakernel (interpret mode) and returns the exact reference APSP."""
+  from repro.serve_mmo import MMOEngine, apsp_request
+  from repro.tuning import CostTable
+  table = CostTable(device="test")
+  nb = (16, 16, 16)
+  table.record("minplus", nb, "float32", "xla", (), 1.0, source="measured")
+  table.record("minplus", nb, "float32", "megakernel", (4,), 1e-9,
+               source="measured")
+  eng = MMOEngine(backend="auto", max_batch=4, cost_table=table)
+  w = _line_graph(12, seed=5)
+  fut = eng.submit(apsp_request(w))
+  eng.run_until_idle()
+  key = next(iter(eng._decisions))
+  assert eng._decisions[key] == ("megakernel", (4,))
+  ref, ref_it = cl_mod.batched_leyzorek_closure(
+      cl_mod.prepare_adjacency(jnp.asarray(w), op="minplus")[None],
+      op="minplus", backend="xla")
+  got = fut.result()
+  np.testing.assert_array_equal(got.value, np.asarray(ref[0]))
+  assert got.extras["iterations"] == int(ref_it[0])
+
+
+def test_engine_mmo_bucket_never_sees_megakernel():
+  """The same winning row must NOT leak into a plain contraction bucket:
+  its pool is the per-contraction backends."""
+  from repro.serve_mmo import MMOEngine, mmo_request
+  from repro.tuning import CostTable
+  table = CostTable(device="test")
+  nb = (16, 16, 16)
+  table.record("minplus", nb, "float32", "xla", (), 1.0, source="measured")
+  table.record("minplus", nb, "float32", "megakernel", (4,), 1e-9,
+               source="measured")
+  eng = MMOEngine(backend="auto", max_batch=4, cost_table=table)
+  rng = np.random.default_rng(0)
+  a = rng.standard_normal((12, 12)).astype(np.float32)
+  fut = eng.submit(mmo_request(a, a, op="minplus"))
+  eng.run_until_idle()
+  assert all(b != "megakernel" for b, _ in eng._decisions.values())
+  assert fut.done()
