@@ -1,0 +1,164 @@
+"""Arena benchmark: slot-based continuous batching vs bucket-cycle batching.
+
+    PYTHONPATH=src python benchmarks/arena_bench.py [--requests 150]
+
+One closure-only request stream (ragged APSP instances in a single shape
+bucket) is replayed OPEN-LOOP — arrivals follow a Poisson process whose
+rate does not react to the server, the regime where batching policy shows
+up in tail latency — against two engines serving in the background:
+
+  batch  — mode="batch": the per-iteration bucket-cycle path.  A request
+           arriving just after a batch launches waits out the ENTIRE
+           remaining fixpoint of the running cohort, then joins the next
+           stack; every distinct cohort size replays a different pow2
+           executable.
+  arena  — mode="arena": requests are admitted into free slots of the
+           device-resident buffer at the next tick boundary (≤ g fused
+           iterations away) and evicted individually at convergence.
+
+Reported per arm: completed/s and p50/p99 end-to-end latency (arrival →
+future completion), plus the steady-state retrace count after a prewarmed
+warmup pass — asserted ZERO for the arena (its three slot programs take
+traced slot/n scalars, so no admission mix can force a recompile) while
+the batch arm is allowed its pow2 cohort ladder.  Results land in
+BENCH_arena.json; README's "Continuous batching" section quotes them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.apps import graphs
+from repro.serve_mmo import MMOEngine, apsp_request
+
+
+def make_stream(n_requests: int, *, nmin: int, nmax: int, seed: int = 0):
+  """Ragged single-bucket APSP stream (bellman_ford: the long fixpoint,
+  where mid-flight admission has the most tail latency to win back)."""
+  rng = np.random.default_rng(seed)
+  reqs = []
+  for _ in range(n_requests):
+    n = int(rng.integers(nmin, nmax + 1))
+    w = graphs.weighted_digraph(n, 0.3, seed=int(rng.integers(0, 2 ** 31)))
+    reqs.append(apsp_request(w, algorithm="bellman_ford"))
+  return reqs
+
+
+def poisson_offsets(n: int, rate_hz: float, seed: int = 1):
+  rng = np.random.default_rng(seed)
+  return np.cumsum(rng.exponential(1.0 / rate_hz, n))
+
+
+def _percentiles(lat):
+  lat = np.asarray(lat, dtype=np.float64)
+  return (float(np.percentile(lat, 50)) * 1e3,
+          float(np.percentile(lat, 99)) * 1e3)
+
+
+def run_open_loop(engine: MMOEngine, stream, offsets):
+  """Submit each request at its Poisson arrival time against the running
+  background loop; latency is arrival → completion (queue + service), read
+  from the engine's per-request records — both stamps on the engine clock,
+  so the measurement doesn't depend on when this thread polls futures."""
+  engine.start()
+  try:
+    t0 = time.perf_counter()
+    futs = []
+    for req, dt in zip(stream, offsets):
+      now = time.perf_counter() - t0
+      if dt > now:
+        time.sleep(dt - now)
+      futs.append(engine.submit(req))
+    for fut in futs:
+      fut.result()
+    wall = time.perf_counter() - t0
+  finally:
+    engine.stop(drain=True)
+  lat = [r.completed_s - r.arrival_s for r in engine._records[-len(stream):]]
+  return wall, lat
+
+
+def bench_arm(label, stream, offsets, *, make_engine, verbose=True):
+  # warmup pass (closed-loop is fine: it populates the executable cache the
+  # same way) so the measured pass prices steady state, not compiles
+  engine = make_engine()
+  engine.prewarm(stream)
+  for f in [engine.submit(r) for r in stream[:8]]:
+    f.result()
+  engine.run_until_idle()
+  engine.reset_stats()
+  misses0 = engine.cache.misses
+
+  wall, lat = run_open_loop(engine, stream, offsets)
+  retraces = engine.cache.misses - misses0
+  p50, p99 = _percentiles(lat)
+  if verbose:
+    print(f"[arena_bench] {label:6s}: {len(lat) / wall:7.1f} completed/s  "
+          f"p50={p50:7.1f}ms  p99={p99:7.1f}ms  wall={wall:.2f}s  "
+          f"(steady-state retraces: {retraces})")
+  return {"wall_s": wall, "completed": len(lat), "p50_ms": p50,
+          "p99_ms": p99, "retraces": retraces}
+
+
+def main(argv=None):
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--requests", type=int, default=150)
+  ap.add_argument("--rate", type=float, default=500.0,
+                  help="open-loop Poisson arrival rate (req/s)")
+  ap.add_argument("--nmin", type=int, default=33)
+  ap.add_argument("--nmax", type=int, default=48)
+  ap.add_argument("--capacity", type=int, default=8)
+  ap.add_argument("--g", type=int, default=4)
+  ap.add_argument("--max-batch", type=int, default=8)
+  ap.add_argument("--backend", default="xla")
+  ap.add_argument("--seed", type=int, default=0)
+  ap.add_argument("--out", default="BENCH_arena.json", metavar="PATH",
+                  help="write both arms' numbers to PATH as JSON "
+                       "('' disables)")
+  args = ap.parse_args(argv)
+
+  stream = make_stream(args.requests, nmin=args.nmin, nmax=args.nmax,
+                       seed=args.seed)
+  offsets = poisson_offsets(len(stream), args.rate, seed=args.seed + 1)
+
+  batch = bench_arm(
+      "batch", stream, offsets,
+      make_engine=lambda: MMOEngine(backend=args.backend,
+                                    max_batch=args.max_batch))
+  arena = bench_arm(
+      "arena", stream, offsets,
+      make_engine=lambda: MMOEngine(backend=args.backend, mode="arena",
+                                    arena_capacity=args.capacity,
+                                    arena_g=args.g))
+
+  print(f"[arena_bench] p99 ratio batch/arena: "
+        f"{batch['p99_ms'] / max(arena['p99_ms'], 1e-9):.2f}x  "
+        f"retraces: batch={batch['retraces']} arena={arena['retraces']}")
+
+  if args.out:
+    doc = {
+        "requests": len(stream), "rate_hz": args.rate,
+        "bucket_n": [args.nmin, args.nmax],
+        "arena_capacity": args.capacity, "arena_g": args.g,
+        "max_batch": args.max_batch, "backend": args.backend,
+        "batch": batch, "arena": arena,
+        "p99_ratio_batch_over_arena": batch["p99_ms"] / max(arena["p99_ms"],
+                                                            1e-9),
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+      json.dump(doc, f, indent=2)
+    print(f"[arena_bench] wrote {args.out}")
+
+  assert arena["retraces"] == 0, (
+      f"arena steady state retraced {arena['retraces']}x — the slot "
+      f"programs must absorb any admission mix after prewarm")
+  assert arena["completed"] == len(stream)
+  assert batch["completed"] == len(stream)
+  return 0
+
+
+if __name__ == "__main__":
+  raise SystemExit(main())

@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figure map:
   §Faults    resilience_bench (goodput + urgent p99 under injected execute
              faults vs fail-whole-batch, disabled-hook overhead < 2% →
              BENCH_resilience.json)
+  §Arena     arena_bench (slot-based continuous batching vs bucket-cycle
+             under open-loop Poisson arrivals, zero steady-state retraces →
+             BENCH_arena.json)
 """
 from __future__ import annotations
 
@@ -27,10 +30,11 @@ import traceback
 def main() -> None:
   from repro.analysis.sanitize import maybe_enable_sanitize
   maybe_enable_sanitize()  # REPRO_SANITIZE=1: debug_nans + analyzer preflight
-  from benchmarks import (algo_opts, apps_bench, area_table, dispatch_bench,
-                          microbench_shapes, microbench_square, qos_bench,
-                          resilience_bench, roofline_table, serve_bench,
-                          shard_bench, sparse_bench)
+  from benchmarks import (algo_opts, apps_bench, area_table, arena_bench,
+                          dispatch_bench, microbench_shapes,
+                          microbench_square, qos_bench, resilience_bench,
+                          roofline_table, serve_bench, shard_bench,
+                          sparse_bench)
   print("name,us_per_call,derived")
   suites = (
       ("fig9", microbench_square.main),
@@ -45,6 +49,7 @@ def main() -> None:
       ("qos", qos_bench.main),
       ("serve", serve_bench.main),
       ("resilience", resilience_bench.main),
+      ("arena", arena_bench.main),
   )
   failed = []
   for name, fn in suites:

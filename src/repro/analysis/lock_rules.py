@@ -52,7 +52,15 @@ GUARDED_BY = {
         attrs=("_decisions", "_schedules", "_static_cost",
                "_fallback_arms_memo", "_records", "_batches", "_rejected",
                "_expired", "_next_id", "_pending", "_inflight", "_running",
-               "_stopped", "scheduler", "admission")),
+               "_stopped", "scheduler", "admission",
+               "_arenas", "_arena_failures")),
+    ("serve_mmo/arena.py", "RequestArena"): LockSpec(
+        locks=("_lock",),
+        # device state handles (_c/_adj/_kv/_act/_it) are guarded too: admit
+        # and tick swap them wholesale, and an unlocked read could pair a
+        # pre-tick iterate with post-tick flags
+        attrs=("_slots", "_free", "_admit_s", "_admitted", "_evicted",
+               "_ticks", "_c", "_adj", "_kv", "_act", "_it")),
     ("serve_mmo/cache.py", "ExecutableCache"): LockSpec(
         locks=("_lock",), attrs=("_entries", "_misses")),
     ("serve_mmo/metrics.py", "ServeMetrics"): LockSpec(

@@ -41,7 +41,7 @@ suite in tests/test_closure_megakernel.py pins this in interpret mode).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -125,9 +125,12 @@ def _make_fixpoint_kernel(sr: sr_mod.Semiring, acc_dtype, nblk: int, bm: int,
       it_ref[0, 0] = it0_ref[r]
       act_ref[0, 0] = act0_ref[r]
 
-    # frozen requests (and steps past the chunk's live budget) skip every
-    # contraction — one scalar test per grid step, no host round-trip
-    live = (act_ref[0, 0] != 0) & (g < glim_ref[0])
+    # frozen requests (and steps past the request's live budget) skip every
+    # contraction — one scalar test per grid step, no host round-trip.  The
+    # budget is a per-request vector: the batched driver broadcasts one
+    # chunk-wide value, the arena hands every slot its own remaining cap so
+    # slots admitted at different times share a launch without over-running.
+    live = (act_ref[0, 0] != 0) & (g < glim_ref[r])
 
     @pl.when(live)
     def _compute():
@@ -163,8 +166,10 @@ def _chunk_call(c: Array, adj: Optional[Array], kv: Array, act: Array,
                 interpret: bool):
   """One megakernel launch: up to ``g_steps`` fixpoint iterations on-chip.
 
-  Returns (iterate, iteration counters, active flags) — the pieces the host
-  ``while_loop`` carries between chunks.
+  ``glim`` is an (R,) int32 vector of per-request live-step budgets —
+  request ``r`` runs ``min(glim[r], g_steps)`` iterations (fewer if it
+  converges first).  Returns (iterate, iteration counters, active flags) —
+  the pieces the host ``while_loop`` carries between chunks.
   """
   sr = sr_mod.get(op)
   acc_dtype = c.dtype
@@ -218,6 +223,75 @@ def _chunk_call(c: Array, adj: Optional[Array], kv: Array, act: Array,
   return out, it_out[:, 0], act_out[:, 0]
 
 
+class ChunkGeometry(NamedTuple):
+  """Resolved kernel layout for one (ring, n, dtype) combination.
+
+  Both megakernel callers — the batched ``megakernel_fixpoint`` driver and
+  the request arena (serve_mmo/arena.py) — derive their buffers from this
+  one resolver, so a slot admitted into the arena lands in a byte-identical
+  layout to the same request stacked into a batch: bit-parity of the two
+  paths is by construction, not by test luck.
+  """
+  was_bool: bool      # boolean ring: stored as float32 {0,1}, output > 0.5
+  missing: float      # ⊕-identity fill for padded cells
+  self_value: float   # ⊗-identity for padded diagonal (isolated vertices)
+  acc_dtype: Any      # on-chip iterate dtype
+  bm: int             # row-slab height (lane/sublane aligned)
+  np_: int            # padded matrix dim (multiple of bm)
+  interpret: bool     # Pallas interpret mode (CPU CI) vs compiled TPU
+
+
+def chunk_geometry(op: str, n: int, dtype=jnp.float32, *, bm: int = 128,
+                   interpret: Optional[bool] = None) -> ChunkGeometry:
+  """Resolve the megakernel layout for ring ``op`` at true size ``n``.
+
+  Raises for rings without a ⊗-identity (addnorm) — no isolated-vertex
+  embedding exists, exactly like the per-iteration path refuses closure.
+  """
+  sr = sr_mod.get(op)
+  missing, self_value = cl_mod.closure_pad_values(op)
+  interp = (jax.default_backend() != "tpu") if interpret is None else (
+      bool(interpret))
+  was_bool = sr.boolean
+  if was_bool:
+    missing, self_value = float(missing), float(self_value)
+  store = jnp.float32 if was_bool else jnp.dtype(dtype)
+  acc_dtype = jnp.float32 if (sr.name == "mma" or was_bool) else (
+      sr.acc_dtype(store))
+  # lane/sublane-aligned padding; interpret mode keeps it minimal so the
+  # CPU parity suite stays cheap
+  bm_ = min(bm, _rup(n, 8 if interp else 128))
+  np_ = _rup(n, bm_)
+  return ChunkGeometry(was_bool=was_bool, missing=missing,
+                       self_value=self_value, acc_dtype=acc_dtype,
+                       bm=bm_, np_=np_, interpret=interp)
+
+
+def fixpoint_iters(algorithm: str, n: int) -> int:
+  """Default trip-count cap: the same bound both fixpoint paths use —
+  Bellman-Ford needs n relaxation rounds, repeated squaring ⌈log2 n⌉."""
+  if algorithm == "bellman_ford":
+    return max(1, int(n))
+  if algorithm == "leyzorek":
+    import math
+    return max(1, math.ceil(math.log2(max(n, 2))))
+  raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def fixpoint_chunk(c: Array, adj: Optional[Array], kv: Array, act: Array,
+                   it: Array, glim: Array, *, op: str, g_steps: int, bm: int,
+                   interpret: bool):
+  """Public chunk entry point — one fused launch of up to ``g_steps``
+  fixpoint iterations over an (R, np_, np_) stack with per-request budgets.
+
+  The arena jit-wraps this over its whole slot buffer each tick; operands
+  must already be in ``chunk_geometry`` layout (padded, acc_dtype, bool
+  rings as float32).  Returns (iterate, iteration counters, active flags).
+  """
+  return _chunk_call(c, adj, kv, act, it, glim, op=op, g_steps=g_steps,
+                     bm=bm, interpret=interpret)
+
+
 def _pad_closure(x: Array, np_: int, missing, self_value) -> Array:
   """Embed (R, n, n) into (R, np_, np_) as isolated vertices — the same
   stable-under-closure padding the serving bucketer uses, so the in-kernel
@@ -257,33 +331,18 @@ def megakernel_fixpoint(adj: Array,
   if g < 1:
     raise ValueError(f"chunk length g must be >= 1, got {g}")
   sr = sr_mod.get(op)
-  # rings without a ⊗-identity (addnorm) cannot embed isolated vertices —
-  # closure is refused exactly like the per-iteration path refuses it
-  missing, self_value = cl_mod.closure_pad_values(op)
 
   r, n = adj.shape[0], adj.shape[-1]
-  if max_iters is not None:
-    iters = max_iters
-  elif algorithm == "bellman_ford":
-    iters = n
-  else:
-    import math
-    iters = max(1, math.ceil(math.log2(max(n, 2))))
+  iters = fixpoint_iters(algorithm, n) if max_iters is None else max_iters
 
-  interp = (jax.default_backend() != "tpu") if interpret is None else interpret
-
+  # the shared layout resolver refuses rings without a ⊗-identity (addnorm)
+  # — no isolated-vertex embedding exists, like the per-iteration path
   was_bool = sr.boolean
   x = adj.astype(jnp.float32) if was_bool else adj
-  if was_bool:
-    missing, self_value = float(missing), float(self_value)
-  acc_dtype = jnp.float32 if (sr.name == "mma" or was_bool) else (
-      sr.acc_dtype(x.dtype))
-
-  # lane/sublane-aligned padding; interpret mode keeps it minimal so the
-  # CPU parity suite stays cheap
-  bm_ = min(bm, _rup(n, 8 if interp else 128))
-  np_ = _rup(n, bm_)
-  c0 = _pad_closure(x.astype(acc_dtype), np_, missing, self_value)
+  geom = chunk_geometry(op, n, adj.dtype, bm=bm, interpret=interpret)
+  acc_dtype, bm_, np_, interp = (geom.acc_dtype, geom.bm, geom.np_,
+                                 geom.interpret)
+  c0 = _pad_closure(x.astype(acc_dtype), np_, geom.missing, geom.self_value)
   adj_operand = c0 if algorithm == "bellman_ford" else None
 
   if valid_n is None:
@@ -302,7 +361,8 @@ def megakernel_fixpoint(adj: Array,
     glim = jnp.minimum(jnp.asarray(g_steps, jnp.int32),
                        jnp.asarray(iters, jnp.int32) - i)
     c2, it2, act2 = _chunk_call(
-        c, adj_operand, kv, active.astype(jnp.int32), it, glim.reshape(1),
+        c, adj_operand, kv, active.astype(jnp.int32), it,
+        jnp.full((r,), glim, jnp.int32),
         op=op, g_steps=g_steps, bm=bm_, interpret=interp)
     return c2, act2 > 0, it2, i + glim
 

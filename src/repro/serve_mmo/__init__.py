@@ -28,6 +28,10 @@ them serving workloads, not one-shot library calls.  This package turns the
                   convergence masks for closures),
   cache.py      — AOT executable cache keyed by (bucket, batch, backend) so
                   steady-state traffic never retraces,
+  arena.py      — device-resident request arena: slot-based continuous
+                  batching for closure fixpoints (``mode="arena"``) —
+                  admit/tick/evict slot lifecycle, bit-identical to the
+                  batch path,
   engine.py     — the engine: submit()/futures, synchronous step() or a
                   background serving loop, per-request latency stats, and
                   the batch-recovery driver (bounded retries, bisection,
@@ -64,6 +68,7 @@ from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
                                  ProblemRequest, RejectedError, apsp_request,
                                  closure_request, knn_request, mmo_request,
                                  reachability_request)
+from repro.serve_mmo.arena import Eviction, RequestArena
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.engine import EngineStats, MMOEngine
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
@@ -86,6 +91,8 @@ __all__ = [
     "MMOResult",
     "MMOEngine",
     "EngineStats",
+    "RequestArena",
+    "Eviction",
     "ExecutableCache",
     "BucketKey",
     "BucketScheduler",

@@ -33,8 +33,10 @@ import numpy as np
 
 from repro.serve_mmo import batching
 from repro.serve_mmo.admission import AdmissionController
-from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture,
+from repro.serve_mmo.api import (DeadlineExceededError, MMOFuture, MMOResult,
                                  ProblemRequest, RejectedError)
+from repro.serve_mmo.arena import (DEFAULT_ARENA_G, DEFAULT_CAPACITY,
+                                   RequestArena)
 from repro.serve_mmo.cache import ExecutableCache
 from repro.serve_mmo.estimator import Estimate, ServiceEstimator
 from repro.serve_mmo.faults import (ARM_FAILURE_KINDS, BatchTimeoutError,
@@ -47,6 +49,11 @@ from repro.serve_mmo.resilience import ResilienceManager
 from repro.serve_mmo.scheduler import (BucketScheduler, MIN_BUCKET,
                                        bucket_dim, contract_shape,
                                        request_bucket)
+
+# the arena's (backend, block, schedule) identity for breaker/estimator
+# accounting: one arm per closure bucket, never re-dispatched (per-slot
+# state isolates poisoned requests instead of bisection)
+_ARENA_ARM = ("arena", (), "local")
 
 
 @dataclasses.dataclass
@@ -173,6 +180,17 @@ class MMOEngine:
   (serve_mmo/faults.py) that exercises every one of these paths on the
   real code path.  Every retry/bisection/breaker transition lands in the
   flight recorder and the Prometheus surfaces.
+
+  Continuous batching (DESIGN.md §Request arena): ``mode="arena"`` serves
+  closure buckets from a device-resident slot buffer (serve_mmo/arena.py)
+  instead of bucket-cycle batches — requests are admitted into free slots
+  the moment they arrive, every live slot advances ``arena_g`` fused
+  iterations per tick, and converged slots evict and backfill between
+  ticks without retracing.  Non-closure buckets keep the batch path.
+  Outputs and iteration counts stay bit-identical to ``mode="batch"``
+  (pinned on the shared parity corpus in tests/test_arena.py); what
+  changes is the waiting: an urgent arrival joins the running fixpoint at
+  the next tick boundary instead of queueing behind a full bucket cycle.
   """
 
   def __init__(self, *, backend: str = "auto", max_batch: int = 8,
@@ -198,12 +216,17 @@ class MMOEngine:
                watchdog_s: Optional[float] = None,
                validate_results: bool = True,
                fallback_backends=None,
-               resilience: Optional[ResilienceManager] = None):
+               resilience: Optional[ResilienceManager] = None,
+               mode: str = "batch",
+               arena_capacity: int = DEFAULT_CAPACITY,
+               arena_g: int = DEFAULT_ARENA_G):
     from repro.core import distributed as dist
     valid_schedules = ("auto", "local") + dist.SCHEDULES
     if schedule not in valid_schedules:
       raise ValueError(f"unknown schedule {schedule!r}; one of "
                        f"{valid_schedules}")
+    if mode not in ("batch", "arena"):
+      raise ValueError(f"unknown mode {mode!r}; one of ('batch', 'arena')")
     if mesh is None and schedule not in ("auto", "local"):
       raise ValueError(f"schedule {schedule!r} needs a mesh")
     self.backend = backend
@@ -252,6 +275,12 @@ class MMOEngine:
                                      clock=self._clock)
     self.resilience = resilience
     self._fallback_arms_memo: dict = {}  # BucketKey → tuple of arms
+    # -- continuous batching (DESIGN.md §Request arena) ---------------------
+    self.mode = mode
+    self.arena_capacity = int(arena_capacity)
+    self.arena_g = int(arena_g)
+    self._arenas: dict = {}          # BucketKey → RequestArena
+    self._arena_failures: dict = {}  # BucketKey → consecutive tick failures
     self._lock = threading.RLock()
     self._work = threading.Condition(self._lock)
     self._idle = threading.Condition(self._lock)  # signaled: _pending empty
@@ -296,8 +325,13 @@ class MMOEngine:
       if memo is None:
         m, k, n = contract_shape(key)
         from repro.tuning import dispatch as _dispatch
+        # arena-mode closure buckets execute on the arena arm, so their
+        # static prior prices slot-seconds there (the fused-chunk roofline —
+        # see tuning/cost_table.py), not whatever the batch path would pick
+        backend = ("arena" if self.mode == "arena" and key.kind == "closure"
+                   else self.backend)
         _, _, s = _dispatch.contraction_seconds(
-            key.op, m, k, n, key.dtypes[0], backend=self.backend,
+            key.op, m, k, n, key.dtypes[0], backend=backend,
             table=self.cost_table)
         memo = (s, self._iteration_factor(key))
         self._static_cost[key] = memo
@@ -319,6 +353,13 @@ class MMOEngine:
     contraction_s, trips = self._static_point(key)
     if not self.adaptive:
       return Estimate(contraction_s * trips, "static")
+    if self.mode == "arena" and key.kind == "closure":
+      # the arena's estimator cell holds measured slot-seconds per request
+      # (admit → evict), observed at eviction — exactly the residency the
+      # admission controller charges for
+      backend, schedule = _ARENA_ARM[0], _ARENA_ARM[2]
+      return self.estimator.predict(key, backend, schedule, contraction_s,
+                                    trips)
     with self._lock:
       backend, _ = self.resolve_backend(key)
       schedule = self.resolve_schedule(key)
@@ -496,6 +537,15 @@ class MMOEngine:
       self._idle.notify_all()
 
   def step(self) -> int:
+    """Serve one engine step; returns #requests completed.  Batch mode
+    schedules + executes one bucket batch.  Arena mode admits queued
+    closure requests into free slots, ticks every live arena, and completes
+    evictions (non-closure traffic still batches)."""
+    if self.mode == "arena":
+      return self._step_arena()
+    return self._step_batch()
+
+  def _step_batch(self) -> int:
     """Schedule + execute one bucket batch; returns #requests completed.
     Requests whose deadline lapsed in the queue are failed here (the
     scheduler diverts them out of the batch) without costing a batch slot."""
@@ -539,6 +589,221 @@ class MMOEngine:
           fut._fail(exc)
       if not self._pending:
         self._idle.notify_all()
+
+  # -- arena mode (DESIGN.md §Request arena) ---------------------------------
+
+  def _arena_for_locked(self, key) -> RequestArena:
+    """One arena per closure bucket, created lazily.  Engine lock held."""
+    arena = self._arenas.get(key)
+    if arena is None:
+      arena = RequestArena(key, capacity=self.arena_capacity, g=self.arena_g,
+                           cache=self.cache, interpret=self.interpret,
+                           clock=self._clock)
+      self._arenas[key] = arena
+      self._arena_failures[key] = 0
+    return arena
+
+  def _arena_live_locked(self) -> bool:
+    """Whether any arena holds resident requests.  Engine lock held; part
+    of every drain condition — scheduler-empty alone no longer means idle."""
+    return any(a.live_slots() for a in self._arenas.values())
+
+  def _step_arena(self) -> int:
+    """One arena-mode step: admit → (batch fallback) → tick/evict."""
+    batch_head = self._arena_admit_phase()
+    completed = 0
+    if batch_head:
+      # the policy's chosen bucket is not closure traffic: serve it through
+      # the unchanged batch path so mixed workloads keep working
+      completed += self._step_batch()
+    completed += self._arena_tick_phase()
+    return completed
+
+  def _arena_admit_phase(self) -> bool:
+    """Move queued closure requests into free arena slots, respecting the
+    policy's bucket order.  Returns True when the queue head is non-closure
+    (the caller then runs one batch step).  Admission stops at a full
+    arena — its slots free up at the next sweep, so progress is guaranteed
+    without ever popping more requests than there are slots."""
+    while True:
+      with self._lock:
+        now = self._clock()
+        key = self.scheduler.peek_bucket(now)
+        if key is None:
+          return False
+        if key.kind != "closure":
+          return True
+        arena = self._arena_for_locked(key)
+        free = arena.free_slots()
+        if free <= 0:
+          return False
+        taken = self.scheduler.take_from(key, free, now=now)
+        expired = self.scheduler.take_expired()
+        if expired:
+          self._expire_locked(expired)
+        label = bucket_label(key)
+        for r in taken:
+          self.admission.on_dequeue(r)
+          self._inflight.add(r.request_id)
+          slot = arena.admit(r, now=self._clock())
+          if self.tracer.enabled:
+            self.tracer.arena_admit(r.request_id, slot=slot, bucket=label)
+
+  def _arena_tick_phase(self) -> int:
+    """Tick every arena with live slots, then complete its evictions."""
+    with self._lock:
+      arenas = [(k, a) for k, a in self._arenas.items() if a.live_slots()]
+    completed = 0
+    for key, arena in arenas:
+      completed += self._tick_arena(key, arena)
+    return completed
+
+  def _tick_arena(self, key, arena) -> int:
+    """One tick of one arena: fault hooks, the fused chunk launch, the
+    eviction sweep, and the attempt-scoped accounting (metrics, breaker,
+    tracer) the batch path's ``_attempt`` does per launch."""
+    label = bucket_label(key)
+    rids = [r.request_id for r in arena.live_requests()]
+    if not rids:
+      return 0
+    t0 = self._clock()
+    try:
+      slow_rule = None
+      if self.faults is not None:
+        if self.faults.check("execute", label=label, backend="arena",
+                             request_ids=rids):
+          raise InjectedFault("execute", label)
+        slow_rule = self.faults.check("slow", label=label, backend="arena",
+                                      request_ids=rids)
+
+      def run():
+        if slow_rule is not None:
+          time.sleep(slow_rule.delay_s)
+        arena.tick()
+        return arena.sweep()  # blocks on the tick's device flags
+
+      evictions = self._call_with_watchdog(run, label)
+    except Exception as e:  # noqa: BLE001 — classified + retried below
+      self._arena_tick_failed(key, arena, e)
+      return 0
+    t1 = self._clock()
+    transition = self.resilience.on_success(key, _ARENA_ARM)
+    if self.tracer.enabled and transition == "close":
+      self.tracer.instant("breaker_close", cat="resilience",
+                          args={"bucket": label, "backend": "arena",
+                                "schedule": "local"})
+    with self._lock:
+      self._arena_failures[key] = 0
+      self._batches += 1
+      self.metrics.on_batch(key, host_s=0.0, device_s=t1 - t0, h2d_bytes=0)
+    if self.tracer.enabled:
+      self.tracer.arena_tick(label, live=len(rids), evicted=len(evictions),
+                             g=arena.g, t0_s=t0, t1_s=t1)
+    return self._finish_evictions(key, arena, evictions, label)
+
+  def _arena_tick_failed(self, key, arena, exc) -> None:
+    """Tick failure recovery: slots stay resident under the transient-retry
+    budget (the next step retries the whole tick); once the budget is spent
+    every resident request fails together and the arena resets.  There is
+    no bisection here — per-slot state already isolates poisoned requests
+    (a NaN slot fails alone at eviction), so a tick-level failure is by
+    construction arm-wide, not request-specific."""
+    label = bucket_label(key)
+    kind = classify_failure(exc, "execute")
+    self.metrics.on_batch_failure(kind)
+    if kind in ARM_FAILURE_KINDS:
+      transition = self.resilience.on_failure(key, _ARENA_ARM)
+      if self.tracer.enabled and transition == "open":
+        self.tracer.instant("breaker_open", cat="resilience",
+                            args={"bucket": label, "backend": "arena",
+                                  "schedule": "local", "kind": kind})
+    with self._lock:
+      self._arena_failures[key] = self._arena_failures.get(key, 0) + 1
+      failures = self._arena_failures[key]
+    if failures <= self.transient_retries:
+      self.metrics.on_retry()
+      backoff = self.retry_backoff_s * (2.0 ** min(failures - 1, 3))
+      if backoff > 0.0:
+        time.sleep(backoff)
+      return
+    with self._lock:
+      self._arena_failures[key] = 0
+    victims = arena.reset()
+    if self.tracer.enabled:
+      for r in victims:
+        self.tracer.request_end(r.request_id, "failed", executing=True)
+      self.tracer.instant("batch_fail", cat="batch",
+                          args={"bucket": label, "batch": len(victims),
+                                "error": type(exc).__name__})
+    self._fail_requests(key, victims, exc)
+
+  def _finish_evictions(self, key, arena, evictions, label) -> int:
+    """Turn evictions into results: per-request validation, final
+    accounting, and estimator feedback.  The estimator observes measured
+    slot-seconds (admit → evict, rb=1) — the per-request residency QoS
+    predictions price — plus the measured iteration count, mirroring the
+    batch path's two feedback signals."""
+    completed = 0
+    for ev in evictions:
+      r = ev.request
+      value = ev.value
+      poisoned = False
+      if self.faults is not None:
+        nf = self.faults.check("nonfinite", label=label, backend="arena",
+                               request_ids=[r.request_id])
+        if nf is not None:
+          poisoned = True
+          if np.issubdtype(value.dtype, np.floating):
+            value = np.full_like(value, np.nan)
+      bad = (self.validate_results
+             and np.issubdtype(value.dtype, np.floating)
+             and bool(np.isnan(value).any()))
+      if poisoned or bad:
+        # garbage fails THIS slot's future alone; neighbors complete —
+        # the isolation the batch path needs bisection for
+        self.metrics.on_batch_failure("nonfinite")
+        transition = self.resilience.on_failure(key, _ARENA_ARM)
+        if self.tracer.enabled:
+          if transition == "open":
+            self.tracer.instant("breaker_open", cat="resilience",
+                                args={"bucket": label, "backend": "arena",
+                                      "schedule": "local",
+                                      "kind": "nonfinite"})
+          self.tracer.request_end(r.request_id, "failed", executing=True,
+                                  args={"slot": ev.slot})
+        self._fail_requests(key, [r], NonFiniteResultError(label, [ev.slot]))
+        continue
+      now = self._clock()
+      res = MMOResult(value=value,
+                      extras={"iterations": int(ev.iterations)})
+      self.estimator.observe_iterations(key, [int(ev.iterations)])
+      self.estimator.observe_batch(key, _ARENA_ARM[0], _ARENA_ARM[2], 1,
+                                   now - ev.admit_s)
+      if self.tracer.enabled:
+        self.tracer.request_end(r.request_id, "done", executing=True,
+                                args={"slot": ev.slot,
+                                      "iterations": int(ev.iterations)})
+      with self._lock:
+        self._inflight.discard(r.request_id)
+        self._records.append(RequestRecord(
+            request_id=r.request_id, kind=r.kind, op=r.op, bucket=tuple(key),
+            batch_size=1, arrival_s=r.arrival_s, scheduled_s=ev.admit_s,
+            completed_s=now))
+        self.admission.on_done(r)
+        self.metrics.on_complete(key, queue_s=ev.admit_s - r.arrival_s,
+                                 service_s=now - ev.admit_s)
+        fut = self._pending.pop(r.request_id, None)
+        if fut is not None:
+          try:
+            fut._fulfill(res)
+          except Exception as cb:  # noqa: BLE001 — see _complete_sub
+            self.tracer.instant("future_callback_error", cat="engine",
+                                args={"id": r.request_id,
+                                      "error": type(cb).__name__})
+        if not self._pending:
+          self._idle.notify_all()
+      completed += 1
+    return completed
 
   def _serve_batch(self, key, reqs, scheduled_s: float) -> int:
     """The recovery driver: execute the picked batch, isolating failures by
@@ -892,7 +1157,8 @@ class MMOEngine:
     while True:
       done = self.step()
       with self._lock:
-        drained = len(self.scheduler) == 0
+        drained = (len(self.scheduler) == 0
+                   and not self._arena_live_locked())
       if done == 0 and drained:
         return total
       total += done
@@ -1010,6 +1276,14 @@ class MMOEngine:
     seen = {request_bucket(req, min_bucket) for req in sample_reqs}
     before = self.cache.misses
     for key in seen:
+      if self.mode == "arena" and key.kind == "closure":
+        # arena buckets compile their three slot programs instead of the
+        # pow2 batch ladder — after this, admissions/ticks/evictions replay
+        # stored executables (the zero-retrace guarantee test_arena pins)
+        with self._lock:
+          arena = self._arena_for_locked(key)
+        arena.prewarm()
+        continue
       rb = 1
       while True:
         backend, block, schedule = self.resolve_placement(key, rb)
@@ -1065,7 +1339,8 @@ class MMOEngine:
   def _loop(self):
     while True:
       with self._work:
-        while self._running and len(self.scheduler) == 0:
+        while (self._running and len(self.scheduler) == 0
+               and not self._arena_live_locked()):
           self._work.wait()
         if not self._running:
           return

@@ -148,6 +148,40 @@ class FlightRecorder:
          "pid": _PID, "tid": self._tid(), "ts": self._ts(t_s),
          "args": end_args},))
 
+  # -- arena slot lifecycle (admit → tick×k → evict) ---------------------------
+
+  def arena_admit(self, rid: int, *, slot: int, bucket: str,
+                  t_s: Optional[float] = None) -> None:
+    """The request left the queue INTO an arena slot: its ``queued`` slice
+    closes and its ``execute`` slice opens, carrying the slot index.  The
+    slice stays open across every tick the request resides (``arena_tick``
+    X-events land inside it) until ``request_end`` closes it at eviction —
+    together the admit → tick×k → evict span of one slot residency."""
+    if not self.enabled:
+      return
+    ts = self._ts(t_s)
+    tid = self._tid()
+    self._emit((
+        {"ph": "e", "cat": "request", "id": rid, "name": "queued",
+         "pid": _PID, "tid": tid, "ts": ts},
+        {"ph": "b", "cat": "request", "id": rid, "name": "execute",
+         "pid": _PID, "tid": tid, "ts": ts,
+         "args": {"bucket": bucket, "slot": slot}}))
+
+  def arena_tick(self, bucket: str, *, live: int, evicted: int, g: int,
+                 t0_s: float, t1_s: float) -> None:
+    """One arena tick (≤ g fused iterations over every live slot): a
+    complete event on the serving thread's track, with occupancy and the
+    sweep's eviction count in args."""
+    if not self.enabled:
+      return
+    self._emit((
+        {"ph": "X", "cat": "arena", "name": "arena_tick", "pid": _PID,
+         "tid": self._tid(), "ts": t0_s * 1e6,
+         "dur": max(0.0, (t1_s - t0_s) * 1e6),
+         "args": {"bucket": bucket, "live": live, "evicted": evicted,
+                  "g": g}},))
+
   def request_rejected(self, rid: int, reason: str, *, kind: str, op: str,
                        tenant: str, t_s: Optional[float] = None) -> None:
     """Admission refused the request: one instant — a rejection has no

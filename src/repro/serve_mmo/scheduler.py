@@ -178,31 +178,68 @@ class BucketScheduler:
       key = self.policy.pick(self, now)
       if key is None:
         return None
-      heap = self._buckets.get(key)
-      if not heap:  # stale pick (e.g. the bucket dict was cleared) — retry
-        self._buckets.pop(key, None)
-        continue
-      batch = []
       cap = min(self.max_batch, self.policy.batch_cap(key, self, now))
-      while heap and len(batch) < cap:
-        entry = heapq.heappop(heap)
-        if entry.taken:
-          continue
-        entry.taken = True
-        if entry.req.deadline_at is not None:
-          self._deadline_queued = max(0, self._deadline_queued - 1)
-        deadline = entry.req.deadline_at
-        if ((deadline is not None and deadline < now)
-            or self.policy.fail_fast(entry, key, self, now)):
-          self._expired.append(entry.req)
-          continue
-        batch.append(entry.req)
-      if not heap:
-        del self._buckets[key]
+      batch = self._take_locked(key, cap, now)
       if batch:
-        self.policy.on_batch(key, batch, self)
-        self.picks += 1
         return key, batch
+
+  def _take_locked(self, key, cap: int, now: float) -> list:
+    """Pop up to ``cap`` live requests from one bucket's heap — the shared
+    core of ``next_batch`` and ``take_from``.  Expired / failed-fast
+    entries are diverted to the ``take_expired`` side channel and do not
+    count toward the cap; an emptied heap deletes its bucket."""
+    heap = self._buckets.get(key)
+    if not heap:  # stale pick (e.g. the bucket dict was cleared)
+      self._buckets.pop(key, None)
+      return []
+    batch = []
+    while heap and len(batch) < cap:
+      entry = heapq.heappop(heap)
+      if entry.taken:
+        continue
+      entry.taken = True
+      if entry.req.deadline_at is not None:
+        self._deadline_queued = max(0, self._deadline_queued - 1)
+      deadline = entry.req.deadline_at
+      if ((deadline is not None and deadline < now)
+          or self.policy.fail_fast(entry, key, self, now)):
+        self._expired.append(entry.req)
+        continue
+      batch.append(entry.req)
+    if not heap:
+      del self._buckets[key]
+    if batch:
+      self.policy.on_batch(key, batch, self)
+      self.picks += 1
+    return batch
+
+  def peek_bucket(self, now: Optional[float] = None):
+    """The policy's current bucket choice WITHOUT popping anything — the
+    arena admission path peeks to decide whether the queue head is closure
+    traffic (arena-eligible) or must go through the batch path.  Stale
+    picks are cleaned up exactly like ``next_batch``."""
+    if now is None:
+      now = self._clock()
+    while True:
+      key = self.policy.pick(self, now)
+      if key is None:
+        return None
+      if self._buckets.get(key):
+        return key
+      self._buckets.pop(key, None)
+
+  def take_from(self, key, limit: int, now: Optional[float] = None) -> list:
+    """Pop up to ``limit`` live requests from ONE specific bucket — the
+    arena admission path, where the engine (not max_batch) bounds how many
+    requests leave the queue: its free slot count.  Shares ``next_batch``'s
+    mechanics (expiry diversion, policy bookkeeping, pick accounting)."""
+    if now is None:
+      now = self._clock()
+    t0 = time.perf_counter()
+    try:
+      return self._take_locked(key, limit, now)
+    finally:
+      self.pick_seconds += time.perf_counter() - t0
 
   def take_expired(self) -> list:
     """Requests diverted by deadline expiry / fail-fast since the last call

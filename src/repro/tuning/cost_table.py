@@ -122,7 +122,7 @@ def _local_point_seconds(sr, m: int, k: int, n: int, itemsize: int,
 
   if backend == "xla":
     on_mxu = sr.mxu_rewrite is not None
-  elif backend in ("pallas", "megakernel"):
+  elif backend in ("pallas", "megakernel", "arena"):
     on_mxu = sr.name in ("mma", "addnorm")  # in-kernel MXU rewrites
   else:  # 'vector'
     on_mxu = False
@@ -133,13 +133,15 @@ def _local_point_seconds(sr, m: int, k: int, n: int, itemsize: int,
     t_comp = flops * hw.vpu_hazard(sr.name) / (
         hw.PEAK_FLOPS_BF16 * hw.VPU_RATIO)
 
-  if backend == "megakernel":
+  if backend in ("megakernel", "arena"):
     # fused whole-fixpoint arm: the iterate stays VMEM-resident across the
     # chunk, so the table's one-contraction unit pays the HBM round-trip
     # only once per G iterations — compute-bound contractions price the
     # same as pallas, bandwidth-bound ones price ~G× cheaper, which is the
     # whole reason the arm exists (TCU model: off-chip traffic bounds
-    # iterative matrix algorithms, not FLOPs)
+    # iterative matrix algorithms, not FLOPs).  The request arena
+    # (serve_mmo/arena.py) runs the same fused chunk over its slot buffer,
+    # so its per-contraction slot-second prior is the same roofline
     g = int(cfg[0]) if cfg else 8
     t = max(t_comp, t_mem / max(g, 1))
     # one grid step per output row-block per iteration, request dim amortized

@@ -1,0 +1,156 @@
+"""Shared closure parity corpus — one table of adversarial fixpoint inputs.
+
+Three execution paths compute semiring closures: the per-iteration batched
+reference (``core.closure._batched_fixpoint`` via ``backend="xla"``), the
+fused Pallas megakernel (``fixpoint_backend="megakernel"``), and the
+device-resident request arena (``serve_mmo/arena.py``).  Their contract is
+*bit-identity* — outputs AND per-request iteration counts.  This module is
+the single source of inputs all three parity suites assert against
+(``test_closure_megakernel.py``, ``test_serve_mmo.py``, ``test_arena.py``),
+so the paths cannot drift apart silently: a new adversarial case added here
+is automatically pinned on every path.
+
+Cases cover: every ring with a ⊗-identity × both algorithms, inf/NaN edge
+weights, fully isolated vertices, ragged ``valid_n`` inside one bucket,
+already-converged seeds co-batched with stragglers, and ``max_iters`` caps
+that the chunk length does not divide.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import closure as cl_mod
+from repro.core import semiring as sr_mod
+from repro.serve_mmo.scheduler import bucket_dim
+
+IDENTITY_RINGS = tuple(op for op in sr_mod.ALL_OPS
+                       if sr_mod.get(op).otimes_identity is not None)
+
+
+def rand_adj(op, n, r, seed=0):
+  """Random prepared (R, n, n) adjacency stack in ring ``op``'s conventions."""
+  sr = sr_mod.get(op)
+  rng = np.random.default_rng(seed)
+  missing, _ = cl_mod.closure_pad_values(op)
+  if sr.boolean:
+    w = rng.random((r, n, n)) > 0.6
+  else:
+    w = rng.uniform(0.2, 1.5, (r, n, n)).astype(np.float32)
+    if op == "mma":
+      # strictly upper-triangular (nilpotent): the mma closure terminates
+      # exactly instead of growing without bound
+      w = np.triu(0.1 * w, k=1).astype(np.float32)
+    keep = rng.random((r, n, n)) > 0.5
+    w = np.where(keep, w, np.float32(missing)).astype(np.float32)
+  return np.array(cl_mod.prepare_adjacency(jnp.asarray(w), op=op))
+
+
+def line_graph(n, seed=0):
+  """Weighted directed line 0→1→…→n−1; every other edge is missing (inf)."""
+  rng = np.random.default_rng(seed)
+  w = np.full((n, n), np.inf, np.float32)
+  w[np.arange(n - 1), np.arange(1, n)] = rng.uniform(
+      0.5, 1.5, n - 1).astype(np.float32)
+  return w
+
+
+def _prepared_line(n, seed=0):
+  return np.array(cl_mod.prepare_adjacency(
+      jnp.asarray(line_graph(n, seed=seed)), op="minplus"))
+
+
+def _closed_unit_line(n):
+  """The minplus closure of a unit-weight line graph, built directly: an
+  already-converged seed (the fixpoint detects no change on its first probe
+  iteration, so its counter must stop at exactly 1 on every path)."""
+  closed = np.full((n, n), np.inf, np.float32)
+  i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+  closed[j >= i] = (j - i)[j >= i].astype(np.float32)
+  return closed
+
+
+class CorpusCase(NamedTuple):
+  name: str              # pytest id — stable, grep-able
+  op: str                # semiring ring
+  algorithm: str         # leyzorek | bellman_ford
+  graphs: Tuple[np.ndarray, ...]  # prepared true-size (n, n) adjacencies
+  sizes: Tuple[int, ...]          # true n per graph
+  nb: int                # shared bucket dim (every graph buckets here)
+  max_iters: Optional[int]        # explicit cap, or None for the default
+  engine_ok: bool        # servable via the engine path (no explicit cap)
+
+
+def _case(name, op, algorithm, graphs, *, max_iters=None, engine_ok=True):
+  graphs = tuple(np.asarray(g) for g in graphs)
+  sizes = tuple(int(g.shape[-1]) for g in graphs)
+  nbs = {bucket_dim(n) for n in sizes}
+  assert len(nbs) == 1, f"corpus case {name} spans buckets {nbs}"
+  return CorpusCase(name=name, op=op, algorithm=algorithm, graphs=graphs,
+                    sizes=sizes, nb=nbs.pop(), max_iters=max_iters,
+                    engine_ok=engine_ok)
+
+
+def _build_corpus():
+  cases = []
+  # every ⊗-identity ring × both algorithms, random adversarial stacks
+  # (inf-missing edges, nilpotent mma, boolean rings)
+  for op in IDENTITY_RINGS:
+    stack = rand_adj(op, 12, 2, seed=hash(op) % 1000)
+    for algorithm in ("leyzorek", "bellman_ford"):
+      cases.append(_case(f"rand-{op}-{algorithm}", op, algorithm,
+                         tuple(stack)))
+  # ragged true sizes inside one padded bucket: masked-K semantics
+  for algorithm in ("leyzorek", "bellman_ford"):
+    cases.append(_case(f"ragged-minplus-{algorithm}", "minplus", algorithm,
+                       [_prepared_line(n, seed=n) for n in (9, 11, 16)]))
+  # an already-converged seed co-batched with a straggler: the seed's
+  # counter must freeze at 1 (the no-change probe) while the line iterates
+  cases.append(_case("converged-seed-minplus-bellman_ford", "minplus",
+                     "bellman_ford",
+                     [_closed_unit_line(10), _prepared_line(10, seed=10)]))
+  # NaN edge weight: the NaN-aware convergence compare must not spin
+  nan_line = _prepared_line(8, seed=8)
+  nan_line[0, 1] = np.nan
+  cases.append(_case("nan-edge-minplus-bellman_ford", "minplus",
+                     "bellman_ford", [nan_line]))
+  # a fully isolated vertex (all edges missing) mid-matrix: indistinguishable
+  # from bucket padding, must stay inert on every path
+  iso = rand_adj("minplus", 12, 1, seed=77)[0]
+  iso[5, :], iso[:, 5] = np.inf, np.inf
+  iso[5, 5] = 0.0
+  cases.append(_case("isolated-vertex-minplus-leyzorek", "minplus",
+                     "leyzorek", [iso]))
+  # explicit max_iters below the natural trip count, chosen so chunk
+  # lengths (g=3,4) do not divide it — engine/arena defaults never cap, so
+  # this case is pinned on the solver paths only
+  cases.append(_case("cap-minplus-bellman_ford", "minplus", "bellman_ford",
+                     [_prepared_line(12, seed=12)], max_iters=7,
+                     engine_ok=False))
+  return tuple(cases)
+
+
+CORPUS = _build_corpus()
+CASE_IDS = tuple(c.name for c in CORPUS)
+
+
+def stacked(case: CorpusCase):
+  """Bucket-padded (R, nb, nb) stack + (R,) valid_n — the batched layout the
+  serving path produces for these requests."""
+  stack = jnp.stack([
+      jnp.asarray(cl_mod.pad_adjacency(jnp.asarray(g), case.nb, op=case.op))
+      for g in case.graphs])
+  return stack, jnp.asarray(case.sizes, jnp.int32)
+
+
+def reference(case: CorpusCase):
+  """Ground truth: the per-iteration batched fixpoint (``backend="xla"``).
+  Returns numpy (R, nb, nb) closure + (R,) iteration counts."""
+  solver = (cl_mod.batched_leyzorek_closure if case.algorithm == "leyzorek"
+            else cl_mod.batched_bellman_ford_closure)
+  stack, valid = stacked(case)
+  out, iters = solver(stack, op=case.op, backend="xla", valid_n=valid,
+                      max_iters=case.max_iters)
+  return np.asarray(out), np.asarray(iters)

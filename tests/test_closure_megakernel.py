@@ -11,29 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import closure as cl_mod
-from repro.core import semiring as sr_mod
+from fixtures import closure_corpus as corpus
+from fixtures.closure_corpus import IDENTITY_RINGS, line_graph
 
-IDENTITY_RINGS = tuple(op for op in sr_mod.ALL_OPS
-                       if sr_mod.get(op).otimes_identity is not None)
+from repro.core import closure as cl_mod
 
 
 def _rand_adj(op, n, r, seed=0):
-  """Random prepared (R, n, n) adjacency stack in ring ``op``'s conventions."""
-  sr = sr_mod.get(op)
-  rng = np.random.default_rng(seed)
-  missing, _ = cl_mod.closure_pad_values(op)
-  if sr.boolean:
-    w = rng.random((r, n, n)) > 0.6
-  else:
-    w = rng.uniform(0.2, 1.5, (r, n, n)).astype(np.float32)
-    if op == "mma":
-      # strictly upper-triangular (nilpotent): the mma closure terminates
-      # exactly instead of growing without bound
-      w = np.triu(0.1 * w, k=1).astype(np.float32)
-    keep = rng.random((r, n, n)) > 0.5
-    w = np.where(keep, w, np.float32(missing)).astype(np.float32)
-  return cl_mod.prepare_adjacency(jnp.asarray(w), op=op)
+  return jnp.asarray(corpus.rand_adj(op, n, r, seed=seed))
 
 
 def _assert_parity(op, algorithm, adj, *, valid_n=None, g=3, max_iters=None):
@@ -57,12 +42,23 @@ def test_parity_all_rings(op, algorithm):
   _assert_parity(op, algorithm, adj, g=3)
 
 
+@pytest.mark.parametrize("case", corpus.CORPUS, ids=corpus.CASE_IDS)
+def test_corpus_parity_megakernel(case):
+  """The shared adversarial corpus, megakernel vs reference: every case the
+  serving paths are pinned on must hold through the fused kernel too."""
+  solver = (cl_mod.batched_leyzorek_closure if case.algorithm == "leyzorek"
+            else cl_mod.batched_bellman_ford_closure)
+  stack, valid = corpus.stacked(case)
+  ref_out, ref_it = corpus.reference(case)
+  mk_out, mk_it = solver(stack, op=case.op, fixpoint_backend="megakernel",
+                         megakernel_g=3, valid_n=valid,
+                         max_iters=case.max_iters, interpret=True)
+  np.testing.assert_array_equal(np.asarray(mk_out), ref_out)
+  np.testing.assert_array_equal(np.asarray(mk_it), ref_it)
+
+
 def _line_graph(n, seed=0):
-  rng = np.random.default_rng(seed)
-  w = np.full((n, n), np.inf, np.float32)
-  w[np.arange(n - 1), np.arange(1, n)] = rng.uniform(
-      0.5, 1.5, n - 1).astype(np.float32)
-  return w
+  return line_graph(n, seed=seed)
 
 
 def test_parity_ragged_valid_n():

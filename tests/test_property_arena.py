@@ -1,0 +1,133 @@
+"""Property-based arena tests: random slot lifecycles vs a pure-Python model.
+
+Hypothesis drives random admit/tick/sweep sequences (with backfill arising
+naturally whenever an admit follows a sweep) against both the real
+device-resident arena and a trivially-auditable host model.  The model
+predicts the ENTIRE observable lifecycle from two numbers per request —
+the batched reference's iteration count and the arena's per-tick budget:
+
+    iters_done' = min(ref_iters, min(max_iters, iters_done + g))
+    evict exactly when iters_done == ref_iters or iters_done >= max_iters
+
+so the properties pin, for every random schedule:
+
+  * the sweep's evicted slot set equals the model's prediction (no early,
+    late, or spurious evictions),
+  * every eviction's value and iteration count are bit-equal to the
+    batched reference — a converged slot's value cannot drift no matter
+    how many extra ticks its neighbors keep it resident for,
+  * an admit never lands on a live slot and capacity is never exceeded,
+  * every admitted request is evicted exactly once after drain.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import closure as cl_mod  # noqa: E402
+from repro.serve_mmo import RequestArena, apsp_request  # noqa: E402
+from repro.serve_mmo.cache import ExecutableCache  # noqa: E402
+from repro.serve_mmo.scheduler import request_bucket  # noqa: E402
+
+_CACHE = ExecutableCache()  # shared: each (capacity, g) combo compiles once
+_NB = 8
+
+
+def _line(n, seed):
+  rng = np.random.default_rng(seed)
+  w = np.full((n, n), np.inf, np.float32)
+  w[np.arange(n - 1), np.arange(1, n)] = rng.uniform(
+      0.5, 1.5, n - 1).astype(np.float32)
+  return w
+
+
+def _reference(w, n):
+  prepared = cl_mod.prepare_adjacency(np.asarray(w), op="minplus")
+  stack = np.asarray(cl_mod.pad_adjacency(prepared, _NB, op="minplus"))[None]
+  out, it = cl_mod.batched_bellman_ford_closure(
+      stack, op="minplus", backend="xla", valid_n=np.asarray([n], np.int32))
+  return np.array(np.asarray(out[0])[:n, :n]), int(it[0])
+
+
+# small graph pool, references precomputed once: (weights, n, value, iters)
+_POOL = []
+for _i, _n in enumerate((5, 6, 7, 8, 6, 8)):
+  _w = _line(_n, 100 + _i)
+  _v, _it = _reference(_w, _n)
+  _POOL.append((_w, _n, _v, _it))
+
+
+class _ModelArena:
+  """The host-side prediction of the device arena's observable behavior."""
+
+  def __init__(self, capacity, g, max_iters):
+    self.capacity, self.g, self.max_iters = capacity, g, max_iters
+    self.slots = {}  # slot -> [pool_idx, iters_done]
+
+  def admit(self, slot, pool_idx):
+    assert slot not in self.slots, "admit landed on a live slot"
+    assert len(self.slots) < self.capacity, "capacity exceeded"
+    self.slots[slot] = [pool_idx, 0]
+
+  def tick(self):
+    for state in self.slots.values():
+      ref_iters = _POOL[state[0]][3]
+      state[1] = min(ref_iters, min(self.max_iters, state[1] + self.g))
+
+  def done_slots(self):
+    return {s for s, (pi, it) in self.slots.items()
+            if it == _POOL[pi][3] or it >= self.max_iters}
+
+
+def _check_sweep(arena, model, completions):
+  evictions = arena.sweep()
+  assert {ev.slot for ev in evictions} == model.done_slots()
+  for ev in evictions:
+    pool_idx, iters_done = model.slots.pop(ev.slot)
+    _, n, ref_value, _ = _POOL[pool_idx]
+    assert ev.iterations == iters_done
+    np.testing.assert_array_equal(ev.value, ref_value)
+    assert id(ev.request) not in completions, "request completed twice"
+    completions[id(ev.request)] = pool_idx
+
+
+@settings(max_examples=25, deadline=None)
+@given(capacity=st.integers(1, 3), g=st.integers(1, 3),
+       picks=st.lists(st.integers(0, len(_POOL) - 1),
+                      min_size=1, max_size=5),
+       ops=st.lists(st.sampled_from(["admit", "tick", "sweep"]),
+                    min_size=1, max_size=30))
+def test_random_lifecycle_matches_model(capacity, g, picks, ops):
+  pending = [(apsp_request(_POOL[i][0], algorithm="bellman_ford"), i)
+             for i in picks]
+  arena = RequestArena(request_bucket(pending[0][0]), capacity=capacity,
+                       g=g, cache=_CACHE, interpret=True)
+  model = _ModelArena(capacity, g, arena.max_iters)
+  completions = {}
+  admitted = []
+
+  # the drawn schedule, with a drain appended so every example finishes
+  schedule = list(ops) + ["admit", "tick", "sweep"] * (
+      len(pending) * (arena.max_iters // g + 2))
+  for op in schedule:
+    if op == "admit":
+      if not pending or arena.free_slots() == 0:
+        continue
+      req, pool_idx = pending.pop(0)
+      slot = arena.admit(req)
+      model.admit(slot, pool_idx)
+      admitted.append(id(req))
+    elif op == "tick":
+      ticked = arena.tick()
+      assert ticked == bool(model.slots)
+      model.tick()
+    else:
+      _check_sweep(arena, model, completions)
+
+  assert not pending and not model.slots and arena.live_slots() == 0
+  # every admitted request evicted exactly once, with the graph it carried
+  assert sorted(completions) == sorted(admitted)
+  assert sorted(completions.values()) == sorted(picks)
+  stats = arena.stats()
+  assert stats["admitted"] == stats["evicted"] == len(picks)

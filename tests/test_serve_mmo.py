@@ -656,3 +656,32 @@ def test_cache_concurrent_get_or_compile_consistent_accounting():
   assert stats["misses"] >= stats["executables"]
   assert stats["hits"] + stats["executables"] == total_calls
   assert len(cache) == len(keys)
+
+
+# ---------------------------------------------------------------------------
+# cross-path parity: the batch path against the shared closure corpus
+# ---------------------------------------------------------------------------
+
+from fixtures import closure_corpus as corpus  # noqa: E402
+
+
+@pytest.mark.parametrize("case",
+                         [c for c in corpus.CORPUS if c.engine_ok],
+                         ids=[c.name for c in corpus.CORPUS if c.engine_ok])
+def test_corpus_parity_engine_batch_mode(case):
+  """The batched per-iteration path (mode='batch', backend='xla') must be
+  bit-identical — outputs AND iteration counts — to the corpus reference.
+  test_closure_megakernel.py and test_arena.py assert the same corpus for
+  the fused and arena paths, so all three execution paths are pinned to
+  one set of numbers (validation off: the NaN-edge case is data here)."""
+  ref_out, ref_it = corpus.reference(case)
+  eng = MMOEngine(backend="xla", validate_results=False)
+  futs = [eng.submit(closure_request(g, op=case.op, algorithm=case.algorithm,
+                                     prepared=True))
+          for g in case.graphs]
+  eng.run_until_idle()
+  for i, f in enumerate(futs):
+    res = f.result()
+    n = case.sizes[i]
+    np.testing.assert_array_equal(res.value, ref_out[i, :n, :n])
+    assert res.extras["iterations"] == int(ref_it[i])
